@@ -1,0 +1,73 @@
+"""Engine scalability (paper Table I: >20K servers).
+
+Measures events/second of the jitted engine as the farm grows, and the
+replica-parallel throughput (vmapped Monte-Carlo batch — the axis that
+shard_maps across a TPU mesh).  The per-event cost of the dense engine is
+O(state) but it executes at VPU width; the paper's Java heap engine is
+O(log n) pointer chasing — crossover favors the dense engine once replicas
+or farm width amortize the streaming.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from .common import row
+from repro.core import engine, farm as farm_mod, montecarlo, workload
+from repro.core.jobs import dag_single
+from repro.core.types import SimConfig, SleepPolicy
+
+
+def one_farm(n_servers, n_jobs=1000, seed=0):
+    cfg = SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
+                    max_jobs=max(n_jobs, 16), tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=20_000)
+    rng = np.random.default_rng(seed)
+    lam = workload.utilization_to_rate(0.5, 0.01, n_servers, 4)
+    arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
+    specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+    t0 = time.time()
+    res = farm_mod.simulate(cfg, arr, specs)
+    dt = time.time() - t0
+    return res.events / dt, res
+
+
+def replica_throughput(n_replicas=8, n_servers=64, n_jobs=400):
+    cfg = SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
+                    max_jobs=512, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=10_000)
+    rng = np.random.default_rng(1)
+    lam = workload.utilization_to_rate(0.5, 0.01, n_servers, 4)
+    arrs = np.stack([workload.poisson_arrivals(lam, n_jobs, seed=s)
+                     for s in range(n_replicas)])
+    specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs)
+    t0 = time.time()
+    out = montecarlo.run_replicas(cfg, state_b, tc)
+    jax.block_until_ready(out.t)
+    dt = time.time() - t0
+    ev = int(np.asarray(out.events).sum())
+    return ev / dt, out
+
+
+def run(verbose=True, sizes=(64, 512, 4096, 20480)):
+    out = {}
+    for n in sizes:
+        eps, res = one_farm(n, n_jobs=600)
+        out[f"n{n}"] = {"events_per_s": eps, "finished": res.n_finished}
+        if verbose:
+            row(f"bench_engine_n{n}", 1e6 / eps,
+                f"events/s={eps:.0f} finished={res.n_finished}")
+    eps, _ = replica_throughput()
+    out["replicas8"] = {"events_per_s": eps}
+    if verbose:
+        row("bench_engine_replicas8", 1e6 / eps, f"agg_events/s={eps:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,60 @@
+"""Benchmark aggregator: one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark plus a JSON
+summary at the end.  Set --fast for reduced job counts (CI-sized).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_engine, case_a_provisioning, case_b_delay_timer,
+                   case_c_wasp, case_d_network, validation_power)
+
+    fast = args.fast
+    suites = {
+        "case_a": lambda: case_a_provisioning.run(
+            n_jobs=800 if fast else 3000),
+        "case_b": lambda: case_b_delay_timer.run(
+            n_jobs=600 if fast else 2000),
+        "case_c": lambda: case_c_wasp.run(n_jobs=1000 if fast else 4000),
+        "case_d": lambda: case_d_network.run(n_jobs=120 if fast else 300),
+        "validation": lambda: validation_power.run(),
+        "engine": lambda: bench_engine.run(
+            sizes=(64, 512) if fast else (64, 512, 4096, 20480)),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    summary = {}
+    failed = []
+    for name, fn in suites.items():
+        print(f"== {name} ==")
+        try:
+            summary[name] = fn()
+        except Exception as e:
+            traceback.print_exc()
+            failed.append(name)
+            summary[name] = {"error": str(e)}
+        sys.stdout.flush()
+
+    print("\n== summary ==")
+    print(json.dumps(summary, indent=1, default=str))
+    if failed:
+        print(f"FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

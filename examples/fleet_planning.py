@@ -1,0 +1,94 @@
+"""The paper's thesis transplanted to ML clusters: use HolDCSim to plan a
+fleet SERVING the dry-run-profiled models.
+
+The roofline step-time estimate of a compiled (arch × shape × mesh) cell
+becomes the task service-time distribution for the simulator; the paper's
+delay-timer / provisioning policies then answer capacity questions before
+renting a single pod:
+
+  * how many inference pods must stay active at a given request rate to
+    hold P95 TTFT inside QoS;
+  * what a delay-timer power policy saves on the idle pods;
+  * what checkpoint cadence a training fleet of the same size needs
+    (Young/Daly from a node MTBF).
+
+    PYTHONPATH=src python examples/fleet_planning.py [--arch llama3.2-1b]
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core import farm, workload
+from repro.core.jobs import dag_single
+from repro.core.montecarlo import young_daly_interval
+from repro.core.types import SchedPolicy, SimConfig, SleepPolicy, SrvState
+
+
+def load_cell(arch, shape="prefill_32k", mesh="pod",
+              dir_="results/dryrun"):
+    f = pathlib.Path(dir_) / (f"{arch.replace('.', '_').replace('|','_')}"
+                              f"_{shape}_{mesh}.json")
+    cand = list(pathlib.Path(dir_).glob(
+        f"{arch.replace('.', '_').replace('-', '*')}*{shape}_{mesh}.json"))
+    path = f if f.exists() else (cand[0] if cand else None)
+    if path is None:
+        raise FileNotFoundError(f"run the dry-run first ({arch} {shape})")
+    return json.loads(path.read_text())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="requests/s across the fleet")
+    ap.add_argument("--pods", type=int, default=12)
+    args = ap.parse_args()
+
+    cell = load_cell(args.arch)
+    svc = cell["step_time_est"]                   # sec per prefill request
+    print(f"[bridge] {args.arch} prefill_32k on a 256-chip pod: "
+          f"service time ~{svc*1e3:.0f} ms "
+          f"(dominant: {cell['dominant'][2:]}, "
+          f"roofline frac {cell['roofline_fraction']:.3f})")
+
+    # each "server" = one inference pod serving one request at a time per
+    # "core" (model replicas per pod = n_cores)
+    n_jobs = 1200
+    cfg = SimConfig(n_servers=args.pods, n_cores=2, max_jobs=2048,
+                    tasks_per_job=1, local_q=64,
+                    sched_policy=SchedPolicy.LOAD_BALANCE,
+                    sleep_policy=SleepPolicy.SINGLE_TIMER,
+                    sleep_state=SrvState.S3, max_events=80_000)
+    rng = np.random.default_rng(0)
+    arr = workload.wiki_like_trace(n_jobs, args.rate, period=120.0,
+                                   swing=0.6, seed=1)
+    specs = [dag_single(max(rng.normal(svc, 0.1 * svc), 0.2 * svc))
+             for _ in range(n_jobs)]
+
+    qos = 2.5 * svc
+    print(f"[fleet] {args.pods} pods x 2 replicas, {args.rate} req/s, "
+          f"QoS P95 <= {qos*1e3:.0f} ms")
+    for tau in (0.0, 2.0, 10.0):
+        res = farm.simulate(cfg, arr, specs, tau=tau if tau else None)
+        ok = "MEETS" if res.p95_latency <= qos else "VIOLATES"
+        print(f"  tau={tau:5.1f}s: p95={res.p95_latency*1e3:7.0f} ms "
+              f"({ok} QoS)  mean power={res.mean_power:7.0f} W  "
+              f"wakes={int(res.wake_count.sum())}")
+
+    # training-fleet checkpoint cadence for the same hardware scale
+    mtbf_node = 3.0e6                             # ~35 days/node
+    n_nodes = args.pods * 64                      # hosts per pod
+    fleet_mtbf = mtbf_node / n_nodes
+    delta = 45.0                                  # checkpoint write cost (s)
+    print(f"[ckpt] fleet of {n_nodes} hosts: MTBF {fleet_mtbf/60:.1f} min "
+          f"-> Young/Daly interval "
+          f"{young_daly_interval(fleet_mtbf, delta):.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end training driver example: a ~100M-param llama-family model
+trained for a few hundred steps with checkpoint/restart.
+
+On this CPU container we default to a width-reduced sibling so the run
+finishes in minutes; pass --full to use the real smollm-360m config (same
+code path — on a TPU slice add --data/--model for the mesh).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train
+
+
+def main():
+    args = sys.argv[1:]
+    if "--full" in args:
+        args.remove("--full")
+        arch = ["--arch", "smollm-360m"]
+    else:
+        arch = ["--arch", "smollm-360m", "--smoke"]
+    ckpt = pathlib.Path("results/ckpt_example")
+    rc = train.main(arch + ["--steps", "300", "--batch", "8",
+                            "--seq", "128", "--ckpt-dir", str(ckpt),
+                            "--ckpt-every", "100", "--resume"] + args)
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

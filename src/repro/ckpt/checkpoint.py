@@ -1,0 +1,142 @@
+"""Fault-tolerant checkpointing.
+
+Design goals (1000+-node posture, DESIGN.md §4):
+  * atomic   — write to ``<dir>/tmp.<step>`` then rename; a crash mid-write
+    can never corrupt the latest checkpoint;
+  * mesh-agnostic restore — leaves are saved as full logical arrays (one
+    .npy per leaf, keyed by its pytree path), so a job can restart on a
+    different mesh/pod count and re-shard on load (device_put against the
+    new shardings);
+  * async    — ``save(..., blocking=False)`` snapshots to host memory
+    synchronously (cheap) and writes in a background thread so the train
+    loop is not stalled by the filesystem;
+  * manifest — step, leaf index and shapes in ``manifest.json`` for
+    inspection and integrity checking.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+# numpy's .npy format round-trips custom dtypes (bfloat16, fp8) as raw void
+# records it cannot cast later; store them as a same-width uint view and
+# restore through ml_dtypes using the manifest's dtype string.
+_VIEW = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+         "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+         "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+
+
+def _leaf_name(path) -> str:
+    return _SAFE.sub("_", jax.tree_util.keystr(path)).strip("_") or "leaf"
+
+
+def _snapshot(tree):
+    """Device -> host copy (gathers sharded arrays to full logical value)."""
+    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- save ---------------------------------------------------------
+    def save(self, state: Any, step: int, blocking: bool = True):
+        host = _snapshot(state)
+        if self._thread is not None:
+            self._thread.join()                 # one in-flight write max
+            self._thread = None
+        if blocking:
+            self._write(host, step)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(host, step), daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, host_state, step: int):
+        tmp = self.dir / f"tmp.{step}"
+        final = self.dir / f"step_{step:010d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(host_state)
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(leaves):
+            name = f"{i:04d}_{_leaf_name(path)}"
+            arr = np.asarray(leaf)
+            if arr.dtype.name in _VIEW:
+                arr = arr.view(_VIEW[arr.dtype.name][0])
+            np.save(tmp / f"{name}.npy", arr, allow_pickle=False)
+            manifest["leaves"].append(
+                {"name": name, "path": jax.tree_util.keystr(path),
+                 "shape": list(np.shape(leaf)),
+                 "dtype": str(np.asarray(leaf).dtype)})
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:010d}", ignore_errors=True)
+
+    # ---- restore ------------------------------------------------------
+    def all_steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings for the *current* mesh — this is what makes restarts
+        elastic across mesh shapes."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:010d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        assert len(leaves) == len(manifest["leaves"]), \
+            (len(leaves), len(manifest["leaves"]))
+        loaded = []
+        for m in manifest["leaves"]:
+            arr = np.load(d / f"{m['name']}.npy")
+            if m["dtype"] in _VIEW:
+                arr = arr.view(_VIEW[m["dtype"]][1])
+            loaded.append(arr)
+        for got, want in zip(loaded, leaves):
+            assert tuple(got.shape) == tuple(want.shape), \
+                f"shape mismatch: {got.shape} vs {want.shape}"
+        tree = jax.tree_util.tree_unflatten(treedef, loaded)
+        tree = jax.tree.map(
+            lambda a, w: np.asarray(a).astype(w.dtype), tree, like)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, step

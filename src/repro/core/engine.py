@@ -1,0 +1,374 @@
+"""The event-driven simulation engine, vectorized for TPU (DESIGN.md §3).
+
+The paper's sequential priority-queue loop becomes:
+
+    while not done:
+        t_next = min over all dense candidate-event arrays      (VPU reduce)
+        accrue energy for (t_next - t)                          (exact: state
+                                                                 is piecewise
+                                                                 constant)
+        apply ALL events with time <= t_next as masked updates  (dense)
+
+Semantics are identical to a heap-based DES — we always advance to the
+global minimum event time, so there is no time-discretization error.  The
+per-iteration work is O(state) streaming instead of O(log n) pointer
+chasing, which is exactly the trade the TPU wants; `kernels/dcsim_step.py`
+fuses the min-reduction + energy accrual of the hot loop into one VMEM pass.
+
+Event sources:
+  job arrival            jobs.arrival[arr_ptr]
+  task completion        min core_busy_until
+  wake completion        min srv_wake_at
+  delay-timer expiry     scheduler.next_timer_event
+  flow completion        min flows.done_at          (network mode)
+  pending work           t (now) when READY tasks await placement
+
+Scheduling/assignment model: the global scheduler assigns servers to ALL
+tasks of a job at arrival (policy-driven, sequential over the job's <=T
+tasks).  When a parent task finishes, each DAG edge either decrements the
+child's dep_count immediately (no network / same server / zero bytes) or
+spawns a flow parent_server -> child_server; the flow's completion
+decrements it.  dep_count==0 turns a task READY; READY tasks are drained
+(bounded per step) into their server's local ring queue, waking sleeping
+servers on demand.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import network as net_mod
+from . import power, scheduler, server
+from .types import (INF, FlowTable, JobTable, NetState, SchedState,
+                    ServerFarm, SimConfig, SimState, SrvState, TaskStatus,
+                    init_farm, init_flows, init_net, init_sched, replace)
+
+
+# ==========================================================================
+# helpers
+# ==========================================================================
+
+def _active_jobs(jobs: JobTable) -> jnp.ndarray:
+    """Tasks in flight (READY/QUEUED/RUNNING) — the provisioning load
+    metric."""
+    s = jobs.status
+    return ((s == TaskStatus.READY) | (s == TaskStatus.QUEUED)
+            | (s == TaskStatus.RUNNING)).sum()
+
+
+def _pending_jobs(jobs: JobTable) -> jnp.ndarray:
+    """Tasks waiting for a core (READY/QUEUED, excluding RUNNING) — the
+    WASP pool metric (paper §IV-C: 'pending jobs per server'); counting
+    running tasks would stop multi-core servers from ever consolidating."""
+    s = jobs.status
+    return ((s == TaskStatus.READY) | (s == TaskStatus.QUEUED)).sum()
+
+
+def _next_arrival(jobs: JobTable) -> jnp.ndarray:
+    J = jobs.arrival.shape[0]
+    return jnp.where(jobs.arr_ptr < J,
+                     jobs.arrival[jnp.clip(jobs.arr_ptr, 0, J - 1)], INF)
+
+
+def next_event_time(state: SimState, cfg: SimConfig) -> jnp.ndarray:
+    cands = [
+        _next_arrival(state.jobs),
+        state.farm.core_busy_until.min(),
+        state.farm.srv_wake_at.min(),
+        scheduler.next_timer_event(state.farm, cfg),
+    ]
+    if cfg.has_network:
+        cands.append(state.flows.done_at.min())
+    t_next = functools.reduce(jnp.minimum, cands)
+    # pending READY tasks (or queued work on awake free cores) execute "now"
+    ready = (state.jobs.status == TaskStatus.READY).any()
+    awake = (state.farm.srv_state == SrvState.ACTIVE) \
+        | (state.farm.srv_state == SrvState.IDLE)
+    startable = (awake & (state.farm.q_len > 0)
+                 & (state.farm.core_busy_until >= INF).any(axis=1)).any()
+    t_next = jnp.where(ready | startable, state.t, t_next)
+    return jnp.maximum(t_next, state.t).astype(cfg.time_dtype)
+
+
+# ==========================================================================
+# event appliers
+# ==========================================================================
+
+def _apply_wakeups(farm: ServerFarm, cfg, now):
+    done = (farm.srv_state == SrvState.WAKING) & (farm.srv_wake_at <= now)
+    return replace(
+        farm,
+        srv_state=jnp.where(done, SrvState.IDLE, farm.srv_state),
+        srv_wake_at=jnp.where(done, INF, farm.srv_wake_at),
+        srv_idle_since=jnp.where(done, now, farm.srv_idle_since))
+
+
+def _apply_completions(state: SimState, cfg: SimConfig, tc=None):
+    """Handle all cores whose busy_until <= now.  Marks tasks DONE, updates
+    job bookkeeping, and resolves DAG edges (immediate dep decrement or
+    flow spawn)."""
+    farm, jobs, flows, net = state.farm, state.jobs, state.flows, state.net
+    now = state.t
+    N, C = farm.core_busy_until.shape
+    T = cfg.tasks_per_job
+    JT = jobs.status.shape[0]
+    done_mask = farm.core_busy_until <= now                       # (N, C)
+    tid = jnp.where(done_mask, farm.core_task, -1)                # (N, C)
+    flat_tid = tid.reshape(-1)
+    valid = flat_tid >= 0
+    safe_tid = jnp.clip(flat_tid, 0)
+    # scatter index with out-of-bounds sentinel: clipping -1 to 0 would make
+    # every inactive core slot write a STALE value into task 0 (duplicate
+    # scatter .set is non-deterministic); mode="drop" discards them instead
+    sc_tid = jnp.where(valid, flat_tid, JT)
+
+    # free the cores
+    farm = replace(
+        farm,
+        core_busy_until=jnp.where(done_mask, INF, farm.core_busy_until),
+        core_task=jnp.where(done_mask, -1, farm.core_task))
+
+    # mark DONE + record finish time
+    status = jobs.status.at[sc_tid].set(TaskStatus.DONE, mode="drop")
+    finish = jobs.finish.at[sc_tid].set(now, mode="drop")
+
+    # per-job completion counters
+    tasks_done = jobs.tasks_done.at[safe_tid // T].add(
+        jnp.where(valid, 1, 0).astype(jnp.int32))
+    n_valid_tasks = jobs.valid.reshape(-1, T).sum(axis=1)
+    job_complete = (tasks_done >= n_valid_tasks) & (tasks_done > 0)
+    job_finish = jnp.where(job_complete & (jobs.job_finish >= INF),
+                           now, jobs.job_finish)
+
+    # DAG edges: children of completed tasks
+    ch = jobs.children[safe_tid]                                  # (NC, D)
+    eb = jobs.edge_bytes[safe_tid]
+    ch_valid = (ch >= 0) & valid[:, None] & ~jobs.edge_sent[safe_tid]
+    edge_sent = jobs.edge_sent.at[sc_tid].set(
+        jobs.edge_sent[safe_tid] | ch_valid, mode="drop")
+
+    dep_count = jobs.dep_count
+    if cfg.has_network:
+        # same-server or zero-byte edges resolve immediately; others spawn
+        # flows sequentially (bounded: N*C*D small in network configs)
+        src_srv = jobs.server[safe_tid]                           # (NC,)
+        dst_srv = jobs.server[jnp.clip(ch, 0)]                    # (NC, D)
+        needs_flow = ch_valid & (eb > 0) & (dst_srv != src_srv[:, None])
+        immediate = ch_valid & ~needs_flow
+        dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
+            -immediate.reshape(-1).astype(jnp.int32), mode="drop")
+
+        flat = needs_flow.reshape(-1)
+        f_src = jnp.broadcast_to(src_srv[:, None], ch.shape).reshape(-1)
+        f_dst = dst_srv.reshape(-1)
+        f_bytes = eb.reshape(-1)
+        f_child = ch.reshape(-1)
+
+        def spawn_one(i, carry):
+            flows, net = carry
+            def do(args):
+                flows, net = args
+                fl, nt, ok = net_mod.spawn_flow(
+                    flows, net, tc, cfg, f_src[i], f_dst[i],
+                    f_bytes[i], f_child[i], now)
+                return fl, nt
+            return jax.lax.cond(flat[i], do, lambda a: a, (flows, net))
+
+        flows, net = jax.lax.fori_loop(0, flat.shape[0], spawn_one,
+                                       (flows, net))
+    else:
+        dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
+            -ch_valid.reshape(-1).astype(jnp.int32), mode="drop")
+
+    # BLOCKED -> READY where deps are now satisfied (only arrived jobs)
+    arrived = jnp.arange(jobs.status.shape[0]) // T < jobs.arr_ptr
+    becomes_ready = (status == TaskStatus.BLOCKED) & (dep_count <= 0) \
+        & arrived
+    status = jnp.where(becomes_ready, TaskStatus.READY, status)
+
+    jobs = replace(jobs, status=status, finish=finish,
+                   tasks_done=tasks_done, job_finish=job_finish,
+                   dep_count=dep_count, edge_sent=edge_sent)
+    return replace(state, farm=farm, jobs=jobs, flows=flows, net=net)
+
+
+def _apply_flow_completions(state: SimState, cfg: SimConfig):
+    flows, fin = net_mod.complete_flows(state.flows, state.t)
+    child = jnp.where(fin, flows.child, -1)
+    dep_count = state.jobs.dep_count.at[jnp.clip(child, 0)].add(
+        -fin.astype(jnp.int32), mode="drop")
+    T = cfg.tasks_per_job
+    arrived = jnp.arange(dep_count.shape[0]) // T < state.jobs.arr_ptr
+    ready = (state.jobs.status == TaskStatus.BLOCKED) & (dep_count <= 0) \
+        & arrived
+    status = jnp.where(ready, TaskStatus.READY, state.jobs.status)
+    return replace(state, flows=flows,
+                   jobs=replace(state.jobs, dep_count=dep_count,
+                                status=status))
+
+
+def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
+    """Admit ONE job whose arrival <= t: assign servers to all its tasks
+    (policy), mark roots READY."""
+    jobs, farm, sched = state.jobs, state.farm, state.sched
+    J = jobs.arrival.shape[0]
+    T = cfg.tasks_per_job
+    j = jobs.arr_ptr
+    nxt = jobs.arrival[jnp.clip(j, 0, J - 1)]
+    can = (j < J) & (nxt <= state.t) & (nxt < INF / 2)
+
+    def admit(args):
+        jobs, farm, sched = args
+        base = j * T
+
+        def assign_one(i, carry):
+            jobs, farm, sched = carry
+            tid = base + i
+            is_valid = jobs.valid[tid]
+            net_cost = None
+            if cfg.has_network and \
+                    cfg.sched_policy == scheduler.SchedPolicy.NETWORK_AWARE:
+                # wake cost from the front-end (server 0) to each server
+                costs = jax.vmap(
+                    lambda d: net_mod.route_wake_cost(
+                        tc, state.net, jnp.int32(0), d)
+                )(jnp.arange(cfg.n_servers))
+                net_cost = costs
+            srv, rr = scheduler.pick_server(farm, cfg, sched, net_cost)
+            server_arr = jobs.server.at[tid].set(
+                jnp.where(is_valid, srv, jobs.server[tid]))
+            sched = replace(sched, rr_ptr=jnp.where(is_valid, rr,
+                                                    sched.rr_ptr))
+            return replace(jobs, server=server_arr), farm, sched
+
+        jobs, farm, sched = jax.lax.fori_loop(
+            0, T, assign_one, (jobs, farm, sched))
+
+        # roots -> READY
+        tids = base + jnp.arange(T)
+        root = jobs.valid[tids] & (jobs.dep_count[tids] <= 0)
+        status = jobs.status.at[tids].set(
+            jnp.where(root, TaskStatus.READY, jobs.status[tids]))
+        jobs = replace(jobs, status=status, arr_ptr=j + 1)
+        return jobs, farm, sched
+
+    jobs, farm, sched = jax.lax.cond(
+        can, admit, lambda a: a, (jobs, farm, sched))
+    return replace(state, jobs=jobs, farm=farm, sched=sched)
+
+
+def _drain_ready(state: SimState, cfg: SimConfig):
+    """Enqueue up to cfg.ready_per_step READY tasks at their servers."""
+    def one(_, st):
+        jobs, farm = st.jobs, st.farm
+        is_ready = jobs.status == TaskStatus.READY
+        any_ready = is_ready.any()
+        tid = jnp.argmax(is_ready)                      # first READY
+        srv = jobs.server[tid]
+
+        def do(st):
+            jobs, farm = st.jobs, st.farm
+            farm2, ok = server.queue_push(farm, cfg, srv, tid)
+            farm2 = server.begin_wake(farm2, cfg, srv, st.t)
+            status = jobs.status.at[tid].set(
+                jnp.where(ok, TaskStatus.QUEUED, TaskStatus.DONE))
+            # a dropped task counts as finished-with-drop (stat recorded)
+            jobs2 = replace(jobs, status=status)
+            return replace(st, jobs=jobs2, farm=farm2)
+
+        return jax.lax.cond(any_ready, do, lambda s: s, st)
+
+    return jax.lax.fori_loop(0, cfg.ready_per_step, one, state)
+
+
+def _start_tasks(state: SimState, cfg: SimConfig):
+    farm, started = server.try_start(
+        state.farm, cfg, state.jobs.service, state.t)
+    sid = started.reshape(-1)
+    JT = state.jobs.status.shape[0]
+    sc = jnp.where(sid >= 0, sid, JT)          # drop-sentinel (see above)
+    status = state.jobs.status.at[sc].set(TaskStatus.RUNNING, mode="drop")
+    return replace(state, farm=farm, jobs=replace(state.jobs, status=status))
+
+
+# ==========================================================================
+# the step
+# ==========================================================================
+
+def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
+    t_next = next_event_time(state, cfg)
+    # a t_next at the INF sentinel means "no pending events": freeze time
+    # (the done check below will terminate the loop) instead of integrating
+    # energy over an unbounded interval
+    t_next = jnp.where(t_next >= INF / 2, state.t, t_next)
+    dt = t_next - state.t
+
+    farm = power.accrue_server_energy(state.farm, cfg, dt)
+    net = state.net
+    if cfg.has_network:
+        net = power.accrue_switch_energy(net, cfg, dt)
+    state = replace(state, farm=farm, net=net, t=t_next)
+
+    state = replace(state, farm=_apply_wakeups(state.farm, cfg, state.t))
+    state = _apply_completions(state, cfg, tc)
+    if cfg.has_network:
+        state = _apply_flow_completions(state, cfg)
+    state = _apply_arrival(state, cfg, tc)
+    state = _drain_ready(state, cfg)
+    state = _start_tasks(state, cfg)
+
+    # refresh ACTIVE/IDLE, run local power controllers + pool managers
+    farm = server.refresh_idle_state(state.farm, cfg, state.t)
+    active = _active_jobs(state.jobs)
+    farm, sched = scheduler.provisioning_adjust(farm, cfg, state.sched,
+                                                active)
+    farm = scheduler.wasp_adjust(farm, cfg, _pending_jobs(state.jobs),
+                                 state.t)
+    farm = scheduler.timer_transitions(farm, cfg, state.t)
+    state = replace(state, farm=farm, sched=sched)
+
+    if cfg.has_network:
+        flows, link_flows = net_mod.recompute_rates(state.flows, tc,
+                                                    state.t)
+        net = net_mod.update_switch_states(state.net, link_flows, tc,
+                                           cfg, state.t)
+        state = replace(state, flows=flows, net=net)
+
+    all_done = (~state.jobs.valid
+                | (state.jobs.status == TaskStatus.DONE)).all() \
+        & (_next_arrival(state.jobs) >= INF)
+    if cfg.has_network:
+        all_done = all_done & ~state.flows.active.any()
+    return replace(state, events=state.events + 1, done=all_done)
+
+
+def init_state(cfg: SimConfig, jobs: JobTable, topo=None) -> SimState:
+    tc = net_mod.topo_consts(topo) if (topo is not None and
+                                       cfg.has_network) else None
+    n_sw = topo.n_switches if topo is not None else 0
+    n_ports = topo.n_ports if topo is not None else 1
+    n_links = topo.n_links if topo is not None else 1
+    n_lc = topo.n_linecards if topo is not None else 1
+    state = SimState(
+        t=jnp.zeros((), cfg.time_dtype),
+        farm=init_farm(cfg),
+        jobs=jobs,
+        flows=init_flows(cfg),
+        net=init_net(n_sw, n_ports, n_links, n_lc, cfg),
+        sched=init_sched(cfg),
+        events=jnp.zeros((), jnp.int32),
+        done=jnp.zeros((), bool),
+    )
+    return state, tc
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run(state: SimState, cfg: SimConfig, tc=None) -> SimState:
+    """Run to completion (or cfg.max_events) under lax.while_loop."""
+    def cond(s):
+        return (~s.done) & (s.events < cfg.max_events)
+
+    return jax.lax.while_loop(cond, lambda s: sim_step(s, cfg, tc), state)

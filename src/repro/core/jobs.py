@@ -1,0 +1,115 @@
+"""Job / task DAG modeling (paper §III-C).
+
+Each job j is a DAG G^j(V^j, E^j); task v has a service-time requirement
+w^j_v and each edge carries a transfer size D^j_l.  We store the whole job
+table as dense padded arrays (J*T flat task ids) so the engine can resolve
+dependencies with pure vector ops.
+
+DAG *templates* provided (all used by the paper's case studies):
+  * ``single``   — one task per job (case studies A-C).
+  * ``chain``    — sequential pipeline, e.g. web tier -> DB tier (§III-C).
+  * ``fanout``   — scatter/gather: root -> k parallel -> join (search-style).
+  * ``random``   — layered random DAG with given width/depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .types import INF, JobTable, SimConfig, TaskStatus
+
+__all__ = ["build_jobs", "dag_single", "dag_chain", "dag_fanout", "dag_random",
+           "JobSpec"]
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """Host-side job description before padding into a JobTable."""
+
+    service: np.ndarray          # (T,) per-task service times
+    edges: list                  # list of (parent, child, bytes)
+
+
+def dag_single(service: float) -> JobSpec:
+    return JobSpec(service=np.asarray([service]), edges=[])
+
+
+def dag_chain(services, edge_bytes: float = 0.0) -> JobSpec:
+    sv = np.asarray(services, dtype=np.float64)
+    edges = [(i, i + 1, edge_bytes) for i in range(len(sv) - 1)]
+    return JobSpec(service=sv, edges=edges)
+
+
+def dag_fanout(root: float, leaves, join: float,
+               edge_bytes: float = 0.0) -> JobSpec:
+    lv = np.asarray(leaves, dtype=np.float64)
+    k = len(lv)
+    sv = np.concatenate([[root], lv, [join]])
+    edges = [(0, 1 + i, edge_bytes) for i in range(k)]
+    edges += [(1 + i, 1 + k, edge_bytes) for i in range(k)]
+    return JobSpec(service=sv, edges=edges)
+
+
+def dag_random(n_tasks: int, mean_service: float, edge_prob: float,
+               edge_bytes: float, rng: np.random.Generator) -> JobSpec:
+    sv = rng.exponential(mean_service, size=n_tasks)
+    edges = []
+    for child in range(1, n_tasks):
+        # guarantee connectivity: at least one parent among predecessors
+        parents = [p for p in range(child) if rng.random() < edge_prob]
+        if not parents:
+            parents = [int(rng.integers(0, child))]
+        for p in parents:
+            edges.append((p, child, edge_bytes))
+    return JobSpec(service=sv, edges=edges)
+
+
+def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
+               specs: list) -> JobTable:
+    """Pad a list of JobSpecs (one per arrival) into a dense JobTable."""
+    J, T, D = cfg.max_jobs, cfg.tasks_per_job, cfg.max_children
+    n = min(len(arrivals), J, len(specs))
+
+    arr = np.full((J,), INF)
+    service = np.zeros((J, T))
+    valid = np.zeros((J, T), bool)
+    dep_count = np.zeros((J, T), np.int32)
+    children = np.full((J, T, D), -1, np.int32)
+    edge_bytes = np.zeros((J, T, D))
+
+    for j in range(n):
+        spec = specs[j]
+        t = len(spec.service)
+        if t > T:
+            raise ValueError(f"job {j}: {t} tasks > tasks_per_job={T}")
+        arr[j] = arrivals[j]
+        service[j, :t] = spec.service
+        valid[j, :t] = True
+        slot = np.zeros(T, np.int32)
+        for (p, c, b) in spec.edges:
+            dep_count[j, c] += 1
+            k = slot[p]
+            if k >= D:
+                raise ValueError(f"job {j}: task {p} fanout > max_children={D}")
+            children[j, p, k] = j * T + c      # flat child id
+            edge_bytes[j, p, k] = b
+            slot[p] += 1
+
+    status = np.where(valid, TaskStatus.BLOCKED, TaskStatus.INVALID)
+    return JobTable(
+        arrival=jnp.asarray(arr, cfg.time_dtype),
+        arr_ptr=jnp.zeros((), jnp.int32),
+        service=jnp.asarray(service.reshape(-1), jnp.float32),
+        valid=jnp.asarray(valid.reshape(-1)),
+        dep_count=jnp.asarray(dep_count.reshape(-1)),
+        children=jnp.asarray(children.reshape(J * T, D)),
+        edge_bytes=jnp.asarray(edge_bytes.reshape(J * T, D), jnp.float32),
+        status=jnp.asarray(status.reshape(-1), jnp.int32),
+        edge_sent=jnp.asarray(children.reshape(J * T, D) < 0),
+        server=jnp.full((J * T,), -1, jnp.int32),
+        finish=jnp.full((J * T,), INF, cfg.time_dtype),
+        job_finish=jnp.full((J,), INF, cfg.time_dtype),
+        tasks_done=jnp.zeros((J,), jnp.int32),
+    )

@@ -1,0 +1,90 @@
+"""Replica-parallel simulation sweeps (DESIGN.md §3.3).
+
+The paper runs each configuration "100 times" (Fig 5).  Here replicas
+(different seeds / τ values / thresholds) are a vmapped batch dimension,
+and the batch is shard_mapped across every mesh axis — thousands of
+simulated data centers run in parallel with collectives appearing only in
+the final statistics reduction.  This is the axis that scales the simulator
+to 1000+ nodes; it also hosts the fault-model Monte Carlo used to size
+checkpoint cadence (Young/Daly) for the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine, jobs as jobs_mod
+from .types import INF, SimConfig
+
+
+def batched_state(cfg: SimConfig, arrivals_b, specs, taus=None):
+    """Build R replica states.  arrivals_b (R, J); taus (R,) or (R, N)."""
+    R = arrivals_b.shape[0]
+    tables = [jobs_mod.build_jobs(cfg, arrivals_b[i], specs)
+              for i in range(R)]
+    jobs = jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+    state0, tc = engine.init_state(cfg, jax.tree.map(lambda a: a[0], jobs))
+    state_b = jax.vmap(lambda j: dataclasses.replace(state0, jobs=j))(jobs)
+    if taus is not None:
+        taus = jnp.asarray(taus, cfg.time_dtype)
+        if taus.ndim == 1:
+            taus = jnp.broadcast_to(taus[:, None], (R, cfg.n_servers))
+        farm = dataclasses.replace(state_b.farm, srv_tau=taus)
+        state_b = dataclasses.replace(state_b, farm=farm)
+    return state_b, tc
+
+
+def run_replicas(cfg: SimConfig, state_b, tc=None, mesh=None):
+    """vmap the engine over the replica axis; optionally shard_map the
+    replica batch over every mesh axis."""
+    runner = jax.vmap(functools.partial(engine.run.__wrapped__, cfg=cfg,
+                                        tc=tc))
+    if mesh is None:
+        return jax.jit(runner)(state_b)
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(mesh.axis_names))          # prefix spec: replica dim 0
+    fn = jax.shard_map(runner, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                       check_vma=False)
+    return jax.jit(fn)(state_b)
+
+
+def replica_stats(state_b, cfg: SimConfig):
+    """Host-side per-replica summaries -> dict of numpy arrays."""
+    arr = np.asarray(state_b.jobs.arrival)                # (R, J)
+    fin = np.asarray(state_b.jobs.job_finish)
+    ok = (fin < INF / 2) & (arr < INF / 2)
+    lat = np.where(ok, fin - arr, np.nan)
+    energy = np.asarray(state_b.farm.energy).sum(axis=1)  # (R,)
+    t = np.asarray(state_b.t)
+    return {
+        "mean_latency": np.nanmean(lat, axis=1),
+        "p95_latency": np.nanpercentile(lat, 95, axis=1),
+        "energy": energy,
+        "sim_time": t,
+        "mean_power": energy / np.maximum(t, 1e-12),
+        "events": np.asarray(state_b.events),
+        "finished": ok.sum(axis=1),
+    }
+
+
+def poisson_failure_times(mtbf: float, horizon: float, n_nodes: int,
+                          seed: int = 0) -> np.ndarray:
+    """Fleet-level failure arrivals for checkpoint-cadence studies: a node
+    fleet with per-node MTBF produces failures at rate n/mtbf."""
+    rng = np.random.default_rng(seed)
+    rate = n_nodes / mtbf
+    out, t = [], 0.0
+    while t < horizon:
+        t += rng.exponential(1.0 / rate)
+        if t < horizon:
+            out.append(t)
+    return np.asarray(out)
+
+
+def young_daly_interval(mtbf_fleet: float, ckpt_cost: float) -> float:
+    """Optimal checkpoint interval sqrt(2·δ·MTBF) (Young/Daly)."""
+    return float(np.sqrt(2.0 * ckpt_cost * mtbf_fleet))

@@ -1,0 +1,217 @@
+"""Flow/packet communication model + switch state dynamics (paper §III-B).
+
+Flow-based model: a flow's instantaneous rate is the min over its route links
+of ``cap(l) / n_active_flows(l)`` (equal-share fluid approximation of the
+paper's "multiple flows can share an unsaturated link").  Rates are
+recomputed at every event, so completions are exact under piecewise-constant
+sharing.
+
+Packet model: adds store-and-forward serialization — a fixed extra latency of
+``hops * hop_latency + (hops-1) * mtu/cap`` consumed before bytes drain.
+
+Switch dynamics: ports enter LPI when their link has no flows (802.3az);
+line cards sleep when all their ports are in LPI; whole switches doze when
+traffic-idle (used by case study D's wake-cost-aware placement).  Waking an
+LPI port / slept switch adds its wake latency to the flow's ``extra`` budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .types import (INF, FlowTable, LinecardState, NetState, PortState,
+                    SimConfig, replace)
+
+__all__ = ["TopoConsts", "topo_consts", "spawn_flow", "advance_flows",
+           "recompute_rates", "complete_flows", "update_switch_states",
+           "route_wake_cost"]
+
+
+class TopoConsts:
+    """Device-resident dense topology arrays (host-built once).  Registered
+    as a pytree so it can be passed through jit boundaries."""
+
+    _ARRAYS = ("routes", "route_len", "route_sw", "link_cap", "link_sw",
+               "link_port")
+    _META = ("n_switches", "n_ports", "n_links", "max_hops", "ports_per_lc",
+             "n_linecards")
+
+    def __init__(self, topo=None, **kw):
+        if topo is not None:
+            self.n_switches = topo.n_switches
+            self.n_ports = topo.n_ports
+            self.n_links = topo.n_links
+            self.max_hops = topo.max_hops
+            self.ports_per_lc = topo.ports_per_linecard
+            self.n_linecards = topo.n_linecards
+            self.routes = jnp.asarray(topo.routes)        # (N,N,H) link ids
+            self.route_len = jnp.asarray(topo.route_len)  # (N,N)
+            self.route_sw = jnp.asarray(topo.route_sw)    # (N,N,Hs) switches
+            self.link_cap = jnp.asarray(topo.link_cap)    # (L,)
+            # (L,2): switch index of each endpoint (-1 = server side)
+            ls = np.where(topo.links >= topo.n_servers,
+                          topo.links - topo.n_servers, -1)
+            self.link_sw = jnp.asarray(ls, jnp.int32)
+            self.link_port = jnp.asarray(topo.link_port)  # (L,2)
+        else:
+            for k, v in kw.items():
+                setattr(self, k, v)
+
+    def tree_flatten(self):
+        return ([getattr(self, a) for a in self._ARRAYS],
+                tuple(getattr(self, m) for m in self._META))
+
+    @classmethod
+    def tree_unflatten(cls, meta, arrays):
+        kw = dict(zip(cls._ARRAYS, arrays))
+        kw.update(dict(zip(cls._META, meta)))
+        return cls(**kw)
+
+
+jax.tree_util.register_pytree_node(
+    TopoConsts, lambda tc: tc.tree_flatten(),
+    lambda meta, arrays: TopoConsts.tree_unflatten(meta, arrays))
+
+
+def topo_consts(topo) -> TopoConsts:
+    return TopoConsts(topo)
+
+
+def route_wake_cost(tc: TopoConsts, net: NetState, src, dst):
+    """Case study D metric: number of *sleeping* switches that a flow
+    src->dst would have to wake."""
+    sws = tc.route_sw[src, dst]                           # (Hs,)
+    valid = sws >= 0
+    asleep = ~net.sw_awake[jnp.clip(sws, 0)]
+    return jnp.sum(valid & asleep).astype(jnp.int32)
+
+
+def spawn_flow(flows: FlowTable, net: NetState, tc: TopoConsts,
+               cfg: SimConfig, src, dst, nbytes, child, now):
+    """Allocate a free slot for one flow src->dst (scalar args).
+    Returns (flows, net, ok)."""
+    free = ~flows.active
+    ok = free.any()
+    slot = jnp.argmax(free)
+
+    links = tc.routes[src, dst]                           # (H,)
+    lmask = links >= 0
+    lc = jnp.clip(links, 0)
+    swp = cfg.switch_power
+    sw_a, sw_b = tc.link_sw[lc, 0], tc.link_sw[lc, 1]
+    pt_a = jnp.clip(tc.link_port[lc, 0], 0)
+    port_lpi = (net.port_state[jnp.clip(sw_a, 0), pt_a] == PortState.LPI) \
+        & (sw_a >= 0)
+    asleep_a = jnp.where(sw_a >= 0, ~net.sw_awake[jnp.clip(sw_a, 0)], False)
+    asleep_b = jnp.where(sw_b >= 0, ~net.sw_awake[jnp.clip(sw_b, 0)], False)
+    n_sleep_sw = jnp.sum(jnp.where(lmask, asleep_a | asleep_b, False))
+    n_lpi = jnp.sum(jnp.where(lmask, port_lpi, False))
+    hops = tc.route_len[src, dst].astype(jnp.float32)
+    extra = (n_lpi * swp.t_lpi_wake
+             + jnp.minimum(n_sleep_sw, 1) * swp.t_switch_wake)
+    if cfg.comm_model == 1:  # packet store-and-forward serialization
+        cap0 = tc.link_cap[jnp.clip(links[0], 0)]
+        extra = extra + hops * cfg.hop_latency + \
+            jnp.maximum(hops - 1.0, 0.0) * cfg.flow_mtu / cap0
+
+    # wake every switch on the route
+    sws = tc.route_sw[src, dst]
+    sw_awake = net.sw_awake.at[jnp.where(sws >= 0, sws, tc.n_switches + 1)
+                               ].set(True, mode="drop")
+
+    def set_if(arr, val):
+        return arr.at[slot].set(jnp.where(ok, val, arr[slot]))
+
+    flows = FlowTable(
+        src=set_if(flows.src, src.astype(jnp.int32)),
+        dst=set_if(flows.dst, dst.astype(jnp.int32)),
+        rem=set_if(flows.rem, nbytes.astype(jnp.float32)),
+        rate=set_if(flows.rate, jnp.float32(0.0)),
+        extra=set_if(flows.extra, extra.astype(flows.extra.dtype)),
+        done_at=set_if(flows.done_at, jnp.asarray(INF, flows.done_at.dtype)),
+        child=set_if(flows.child, child.astype(jnp.int32)),
+        active=set_if(flows.active, True),
+    )
+    net = replace(net, sw_awake=sw_awake)
+    return flows, net, ok
+
+
+def recompute_rates(flows: FlowTable, tc: TopoConsts, now):
+    """Equal-share fluid rates + projected completion times.
+    done_at = now + extra + rem/rate."""
+    links = tc.routes[jnp.clip(flows.src, 0), jnp.clip(flows.dst, 0)]  # (F,H)
+    lmask = (links >= 0) & flows.active[:, None]
+    lidx = jnp.clip(links, 0)
+    link_flows = jnp.zeros((tc.n_links,), jnp.int32).at[
+        lidx.reshape(-1)].add(lmask.reshape(-1).astype(jnp.int32))
+    share = tc.link_cap[lidx] / jnp.maximum(link_flows[lidx], 1)
+    share = jnp.where(lmask, share, jnp.inf)
+    rate = jnp.where(flows.active, share.min(axis=1), 0.0)
+    rate = jnp.where(jnp.isfinite(rate), rate, 0.0).astype(jnp.float32)
+    done = jnp.where(
+        flows.active & (rate > 0),
+        now + flows.extra + flows.rem / jnp.maximum(rate, 1e-30),
+        INF).astype(flows.done_at.dtype)
+    return replace(flows, rate=rate, done_at=done), link_flows
+
+
+def advance_flows(flows: FlowTable, dt):
+    """Drain dt seconds: consume fixed latency first, then bytes."""
+    lat_used = jnp.minimum(flows.extra, dt)
+    drain_t = dt - lat_used
+    rem = jnp.where(flows.active,
+                    jnp.maximum(flows.rem - flows.rate * drain_t, 0.0),
+                    flows.rem)
+    extra = jnp.where(flows.active, flows.extra - lat_used, flows.extra)
+    return replace(flows, rem=rem, extra=extra)
+
+
+def complete_flows(flows: FlowTable, now, eps=1e-9):
+    """Deactivate flows whose done_at <= now; returns (flows, done_mask)."""
+    fin = flows.active & (flows.done_at <= now + eps)
+    flows = replace(
+        flows,
+        active=flows.active & ~fin,
+        done_at=jnp.where(fin, INF, flows.done_at),
+        rem=jnp.where(fin, 0.0, flows.rem),
+        rate=jnp.where(fin, 0.0, flows.rate),
+        extra=jnp.where(fin, 0.0, flows.extra),
+    )
+    return flows, fin
+
+
+def update_switch_states(net: NetState, link_flows, tc: TopoConsts,
+                         cfg: SimConfig, now):
+    """Port LPI entry/exit from link activity; linecards sleep when all their
+    ports are idle; traffic-idle switches doze (case D)."""
+    swp = cfg.switch_power
+    W, P = net.port_state.shape
+    busy = jnp.zeros((W, P), bool)
+    for side in range(2):
+        sw = tc.link_sw[:, side]
+        pt = tc.link_port[:, side]
+        m = sw >= 0
+        busy = busy.at[jnp.clip(sw, 0), jnp.clip(pt, 0)].max(
+            m & (link_flows > 0))
+    was_active = net.port_state == PortState.ACTIVE
+    idle_since = jnp.where(was_active & ~busy, now, net.port_idle_since)
+    lpi_ready = ~busy & (now - idle_since >= swp.t_port_lpi_enter)
+    port_state = jnp.where(
+        busy, PortState.ACTIVE,
+        jnp.where(lpi_ready, PortState.LPI, net.port_state))
+
+    # linecards sleep when no port on them is active
+    LC = net.lc_state.shape[1]
+    lc_of = jnp.arange(P) // tc.ports_per_lc
+    port_act = (port_state == PortState.ACTIVE).astype(jnp.int32)
+    lc_busy = jnp.zeros((W, LC), jnp.int32).at[:, jnp.clip(lc_of, 0, LC - 1)
+                                               ].add(port_act)
+    lc_state = jnp.where(lc_busy > 0, LinecardState.ACTIVE,
+                         LinecardState.SLEEP)
+
+    sw_busy = busy.any(axis=1)
+    sw_awake = jnp.where(sw_busy, True, net.sw_awake)
+    return replace(net, port_state=port_state, port_idle_since=idle_since,
+                   lc_state=lc_state, sw_awake=sw_awake,
+                   link_flows=link_flows)

@@ -1,0 +1,151 @@
+"""Global & local scheduling policies (paper §III-E) plus the power-policy
+controllers of the four case studies:
+
+  * round-robin / load-balance task->server assignment
+  * network-aware assignment (case D): least wake cost, then least load
+  * threshold provisioning (case A): grow/shrink the enabled set
+  * delay timers, single & dual (case B): per-server τ before deep sleep
+  * WASP two-pool management (case C): active pool in shallow PkgC6,
+    sleep pool demoted to S3, pool migration on load thresholds
+
+Everything is branch-free dense math over the farm arrays so it can live
+inside the jitted engine step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import (INF, SchedPolicy, ServerFarm, SimConfig, SleepPolicy,
+                    SrvState, replace)
+
+BIG = 1.0e9
+
+
+def server_load(farm: ServerFarm, cfg: SimConfig):
+    """Per-server occupancy = running + queued (N,)."""
+    busy = (farm.core_busy_until < INF).sum(axis=1)
+    return busy + farm.q_len
+
+
+def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None):
+    """Choose a server for one task.  Returns (server, new_rr_ptr).
+
+    net_cost (N,) — case D: number of sleeping switches that would need a
+    wakeup to reach each server (0 when network disabled).
+    """
+    N = cfg.n_servers
+    load = server_load(farm, cfg).astype(jnp.float32)
+    enabled = farm.srv_enabled
+    full = farm.q_len >= cfg.local_q
+
+    if cfg.sched_policy == SchedPolicy.ROUND_ROBIN:
+        # first enabled, non-full server at/after rr_ptr
+        idx = (sched.rr_ptr + jnp.arange(N)) % N
+        ok = enabled[idx] & ~full[idx]
+        off = jnp.argmax(ok)                      # first True
+        srv = idx[off]
+        return srv, (srv + 1) % N
+
+    score = load
+    if cfg.sched_policy == SchedPolicy.NETWORK_AWARE and net_cost is not None:
+        sleeping = (farm.srv_state == SrvState.PKG_C6) \
+            | (farm.srv_state == SrvState.S3) | (farm.srv_state == SrvState.OFF)
+        score = load + net_cost.astype(jnp.float32) * 100.0 \
+            + sleeping.astype(jnp.float32) * 10.0
+    elif cfg.sched_policy == SchedPolicy.WASP_POOLS:
+        score = load + farm.srv_pool.astype(jnp.float32) * BIG
+    elif cfg.sleep_policy == SleepPolicy.DUAL_TIMER:
+        # prioritize the high-τ pool (pool 0) so low-τ servers can sleep
+        score = load + farm.srv_pool.astype(jnp.float32) * 1000.0
+
+    score = jnp.where(enabled & ~full, score, jnp.float32(2 * BIG))
+    return jnp.argmin(score).astype(jnp.int32), sched.rr_ptr
+
+
+def provisioning_adjust(farm: ServerFarm, cfg: SimConfig, sched,
+                        active_jobs):
+    """Case A: keep load-per-enabled-server between (prov_lo, prov_hi) by
+    enabling / disabling one server at a time."""
+    if cfg.sched_policy != SchedPolicy.PROVISIONED:
+        return farm, sched
+    n = sched.n_enabled.astype(jnp.float32)
+    # load per enabled server, normalized by its core count (a server at
+    # 1.0 has every core busy)
+    per = active_jobs.astype(jnp.float32) / jnp.maximum(n * cfg.n_cores, 1.0)
+    grow = per > cfg.prov_hi
+    shrink = (per < cfg.prov_lo) & (sched.n_enabled > 1)
+    n_new = jnp.clip(sched.n_enabled + jnp.where(grow, 1, 0)
+                     - jnp.where(shrink, 1, 0), 1, cfg.n_servers)
+    enabled = jnp.arange(cfg.n_servers) < n_new
+    return replace(farm, srv_enabled=enabled), replace(sched, n_enabled=n_new)
+
+
+def wasp_adjust(farm: ServerFarm, cfg: SimConfig, active_jobs, now):
+    """Case C: migrate one server between active(0)/sleep(1) pools based on
+    pending jobs per active server."""
+    if cfg.sleep_policy != SleepPolicy.WASP:
+        return farm
+    n_active = jnp.maximum((farm.srv_pool == 0).sum(), 1)
+    per = active_jobs.astype(jnp.float32) / n_active.astype(jnp.float32)
+
+    # wake: pick one sleep-pool server (prefer shallowest sleep state)
+    want_wake = per > cfg.wasp_t_wakeup
+    in_sleep_pool = farm.srv_pool == 1
+    wake_score = jnp.where(in_sleep_pool,
+                           farm.srv_state.astype(jnp.float32), BIG)
+    cand_w = jnp.argmin(wake_score)
+    do_wake = want_wake & in_sleep_pool.any()
+    pool = farm.srv_pool.at[cand_w].set(
+        jnp.where(do_wake, 0, farm.srv_pool[cand_w]))
+
+    # sleep: demote one idle active-pool server
+    want_sleep = per < cfg.wasp_t_sleep
+    idle_active = (pool == 0) & (farm.srv_state == SrvState.IDLE)
+    n_act = (pool == 0).sum()
+    sleep_score = jnp.where(idle_active, server_load(farm, cfg), BIG)
+    cand_s = jnp.argmin(sleep_score.astype(jnp.float32))
+    do_sleep = want_sleep & idle_active.any() & (n_act > 1) & ~do_wake
+    pool = pool.at[cand_s].set(jnp.where(do_sleep, 1, pool[cand_s]))
+    return replace(farm, srv_pool=pool)
+
+
+def timer_transitions(farm: ServerFarm, cfg: SimConfig, now):
+    """Local power controllers: move IDLE servers whose delay timer expired
+    into their sleep state (paper §IV-B/C)."""
+    idle = farm.srv_state == SrvState.IDLE
+    # compare against the SAME f32 expression next_timer_event emits —
+    # rewriting it as (now - idle_since >= tau) loses a ulp and livelocks
+    expired = idle & (now >= farm.srv_idle_since + farm.srv_tau)
+
+    if cfg.sleep_policy == SleepPolicy.ALWAYS_ON:
+        return farm
+    if cfg.sleep_policy == SleepPolicy.WASP:
+        # active pool: shallow PkgC6 immediately on idle; sleep pool:
+        # PkgC6 first, S3 after τ in PkgC6
+        to_c6 = idle
+        new_state = jnp.where(to_c6, SrvState.PKG_C6, farm.srv_state)
+        in_c6 = farm.srv_state == SrvState.PKG_C6
+        to_s3 = in_c6 & (farm.srv_pool == 1) \
+            & (now >= farm.srv_idle_since + farm.srv_tau)
+        new_state = jnp.where(to_s3, SrvState.S3, new_state)
+        return replace(farm, srv_state=new_state)
+
+    # SINGLE_TIMER / DUAL_TIMER: idle --τ--> cfg.sleep_state
+    # disabled (provisioned-away) servers sleep immediately
+    expired = expired | (idle & ~farm.srv_enabled)
+    new_state = jnp.where(expired, cfg.sleep_state, farm.srv_state)
+    return replace(farm, srv_state=new_state)
+
+
+def next_timer_event(farm: ServerFarm, cfg: SimConfig):
+    """Earliest pending delay-timer expiry (scalar; INF if none)."""
+    if cfg.sleep_policy in (SleepPolicy.ALWAYS_ON,):
+        return jnp.asarray(INF, cfg.time_dtype)
+    idle = farm.srv_state == SrvState.IDLE
+    t = jnp.where(idle, farm.srv_idle_since + farm.srv_tau, INF)
+    if cfg.sleep_policy == SleepPolicy.WASP:
+        in_c6 = (farm.srv_state == SrvState.PKG_C6) & (farm.srv_pool == 1)
+        t2 = jnp.where(in_c6, farm.srv_idle_since + farm.srv_tau, INF)
+        t = jnp.minimum(t, t2)
+    return t.min().astype(cfg.time_dtype)

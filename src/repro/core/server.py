@@ -1,0 +1,101 @@
+"""Server model primitives (paper §III-A).
+
+Each server: C cores (one task per core, paper's processing-unit model), a
+local FIFO ring queue, and a hierarchical ACPI power state.  All operations
+are dense/masked over the whole farm — no per-server control flow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .types import INF, CoreState, ServerFarm, SimConfig, SrvState, replace
+
+__all__ = ["queue_push", "try_start", "wake_latency", "begin_wake",
+           "refresh_idle_state"]
+
+
+def queue_push(farm: ServerFarm, cfg: SimConfig, server, tid):
+    """Push one task id onto ``server``'s local ring queue.  Returns
+    (farm, ok).  Scalar server/tid (engine drains READY tasks K per step)."""
+    Q = cfg.local_q
+    full = farm.q_len[server] >= Q
+    slot = (farm.q_head[server] + farm.q_len[server]) % Q
+    q_tasks = farm.q_tasks.at[server, slot].set(
+        jnp.where(full, farm.q_tasks[server, slot], tid))
+    q_len = farm.q_len.at[server].add(jnp.where(full, 0, 1))
+    dropped = farm.dropped + jnp.where(full, 1, 0).astype(jnp.int32)
+    return replace(farm, q_tasks=q_tasks, q_len=q_len, dropped=dropped), ~full
+
+
+def wake_latency(cfg: SimConfig, state):
+    sp = cfg.server_power
+    table = jnp.asarray([0.0, 0.0, sp.t_wake_pkg_c6, sp.t_wake_s3,
+                         sp.t_wake_off, 0.0], cfg.time_dtype)
+    return table[state]
+
+
+def begin_wake(farm: ServerFarm, cfg: SimConfig, server, now):
+    """Start waking ``server`` if it is in a sleep state (idempotent)."""
+    st = farm.srv_state[server]
+    sleeping = (st == SrvState.PKG_C6) | (st == SrvState.S3) | (st == SrvState.OFF)
+    lat = wake_latency(cfg, st)
+    srv_state = farm.srv_state.at[server].set(
+        jnp.where(sleeping, SrvState.WAKING, st))
+    srv_wake_at = farm.srv_wake_at.at[server].set(
+        jnp.where(sleeping, now + lat, farm.srv_wake_at[server]))
+    wake_count = farm.wake_count.at[server].add(
+        jnp.where(sleeping, 1, 0).astype(jnp.int32))
+    return replace(farm, srv_state=srv_state, srv_wake_at=srv_wake_at,
+                   wake_count=wake_count)
+
+
+def _pop_one(farm: ServerFarm, cfg: SimConfig, service, now):
+    """One vectorized round: every awake server with a free core and a
+    non-empty queue starts its queue-head task.  Called C times (statically
+    unrolled) from try_start, so a server can fill all cores in one step."""
+    N, C, Q = cfg.n_servers, cfg.n_cores, cfg.local_q
+    awake = (farm.srv_state == SrvState.ACTIVE) | (farm.srv_state == SrvState.IDLE)
+    free_core = farm.core_busy_until >= INF                     # (N, C)
+    has_free = free_core.any(axis=1)
+    # first free core per server
+    core_idx = jnp.argmax(free_core, axis=1)                    # (N,)
+    can = awake & has_free & (farm.q_len > 0)                   # (N,)
+
+    head_tid = farm.q_tasks[jnp.arange(N), farm.q_head % Q]     # (N,)
+    svc = service[jnp.clip(head_tid, 0)] / cfg.core_freq
+    busy_until = now + svc.astype(farm.core_busy_until.dtype)
+
+    rows = jnp.arange(N)
+    new_busy = farm.core_busy_until.at[rows, core_idx].set(
+        jnp.where(can, busy_until, farm.core_busy_until[rows, core_idx]))
+    new_task = farm.core_task.at[rows, core_idx].set(
+        jnp.where(can, head_tid, farm.core_task[rows, core_idx]))
+    q_head = jnp.where(can, (farm.q_head + 1) % Q, farm.q_head)
+    q_len = jnp.where(can, farm.q_len - 1, farm.q_len)
+    started = jnp.where(can, head_tid, -1)                      # (N,)
+    farm = replace(farm, core_busy_until=new_busy, core_task=new_task,
+                   q_head=q_head, q_len=q_len)
+    return farm, started
+
+
+def try_start(farm: ServerFarm, cfg: SimConfig, service, now):
+    """Start as many queued tasks as there are free cores.  Returns
+    (farm, started_tids (C, N)) so the engine can flip task statuses."""
+    started = []
+    for _ in range(cfg.n_cores):
+        farm, s = _pop_one(farm, cfg, service, now)
+        started.append(s)
+    return farm, jnp.stack(started)
+
+
+def refresh_idle_state(farm: ServerFarm, cfg: SimConfig, now):
+    """Recompute ACTIVE/IDLE for awake servers; stamp idle_since on the
+    ACTIVE->IDLE edge (the delay timer anchor, paper §IV-B)."""
+    busy = (farm.core_busy_until < INF).any(axis=1)
+    awake = (farm.srv_state == SrvState.ACTIVE) | (farm.srv_state == SrvState.IDLE)
+    new_state = jnp.where(
+        awake, jnp.where(busy, SrvState.ACTIVE, SrvState.IDLE), farm.srv_state)
+    went_idle = awake & (farm.srv_state == SrvState.ACTIVE) & ~busy
+    idle_since = jnp.where(went_idle, now, farm.srv_idle_since)
+    return replace(farm, srv_state=new_state, srv_idle_since=idle_since)

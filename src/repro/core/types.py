@@ -1,0 +1,350 @@
+"""Core pytree/state types for the HolDCSim-JAX engine.
+
+Design notes
+------------
+The original HolDCSim is an object-oriented, priority-queue event simulator.
+The TPU adaptation (DESIGN.md §3) replaces the heap with dense fixed-shape
+state arrays; every "event source" exposes a vector of candidate next-event
+times and the engine advances to the global minimum.  All types here are
+either *static* configuration (frozen dataclasses hashable for jit) or
+*dynamic* state (registered pytree dataclasses of jnp arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# A "practically infinite" simulation time.  Using a finite sentinel (rather
+# than jnp.inf) keeps min-reductions well-defined under f32 and survives
+# subtraction without producing NaNs.
+INF = 1.0e30
+
+# --------------------------------------------------------------------------
+# enums (plain ints so they can live inside jnp arrays)
+# --------------------------------------------------------------------------
+
+
+class SrvState:
+    """Hierarchical ACPI-style server power states (paper §III-A)."""
+
+    ACTIVE = 0        # S0, at least one core in C0
+    IDLE = 1          # S0, all cores idle (C1)
+    PKG_C6 = 2        # package C6: cores+uncore power-gated, fast wake (<1ms)
+    S3 = 3            # suspend-to-RAM, slow wake
+    OFF = 4           # G2 soft-off
+    WAKING = 5        # transitioning to ACTIVE
+    NUM = 6
+
+
+class CoreState:
+    C0 = 0            # executing
+    C1 = 1            # halt, clock-gated
+    C6 = 2            # core power-gated
+    NUM = 3
+
+
+class TaskStatus:
+    BLOCKED = 0       # waiting on DAG parents
+    READY = 1         # deps satisfied, not yet enqueued at its server
+    QUEUED = 2        # sitting in a local/global queue
+    RUNNING = 3       # on a core
+    COMM = 4          # finished compute, results in flight to children
+    DONE = 5
+    INVALID = 6       # padding
+    NUM = 7
+
+
+class PortState:
+    ACTIVE = 0
+    LPI = 1           # IEEE 802.3az Low Power Idle
+    OFF = 2
+    NUM = 3
+
+
+class LinecardState:
+    ACTIVE = 0
+    SLEEP = 1
+    OFF = 2
+    NUM = 3
+
+
+class SchedPolicy:
+    ROUND_ROBIN = 0
+    LOAD_BALANCE = 1       # least queue+running occupancy
+    NETWORK_AWARE = 2      # least network wake cost (case study D)
+    PROVISIONED = 3        # threshold-driven active-set (case study A)
+    WASP_POOLS = 4         # two-pool workload adaptive (case study C)
+
+
+class SleepPolicy:
+    """Local (per-server) power controller."""
+
+    ALWAYS_ON = 0          # Active-Idle baseline
+    SINGLE_TIMER = 1       # idle --tau--> deep state
+    DUAL_TIMER = 2         # per-server tau (two pools with low/high tau)
+    WASP = 3               # shallow PkgC6 in active pool; PkgC6->S3 in sleep pool
+
+
+# --------------------------------------------------------------------------
+# pytree dataclass helper
+# --------------------------------------------------------------------------
+
+def pytree_dataclass(cls):
+    """A dataclass whose fields are all pytree leaves (jnp arrays)."""
+    cls = dataclasses.dataclass(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+    jax.tree_util.register_dataclass(cls, data_fields=fields, meta_fields=[])
+    return cls
+
+
+def replace(obj, **kw):
+    return dataclasses.replace(obj, **kw)
+
+
+# --------------------------------------------------------------------------
+# static configuration
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServerPowerProfile:
+    """Per-server power (Watts) by state; loosely calibrated to a 10-core
+    Xeon E5-2680 class machine (paper §V-A) and the ACPI hierarchy."""
+
+    p_core_active: float = 13.0     # C0, per core
+    p_core_idle: float = 2.0        # C1, per core
+    p_core_c6: float = 0.3          # core C6, per core
+    p_base: float = 65.0            # uncore+platform when in S0
+    p_pkg_c6: float = 15.0          # package C6 (uncore gated, DRAM refresh)
+    p_s3: float = 9.0               # suspend to RAM
+    p_off: float = 0.0
+    p_wake: float = 145.0           # burst draw during wake transition
+    # transition latencies (seconds)
+    t_wake_pkg_c6: float = 1.0e-3   # <1ms per paper §IV-C
+    t_wake_s3: float = 1.0          # seconds-scale resume
+    t_wake_off: float = 30.0        # full boot
+    t_core_c6_wake: float = 5.0e-5
+
+    def active_power(self, busy_cores: int, total_cores: int) -> float:
+        idle = total_cores - busy_cores
+        return (self.p_base + busy_cores * self.p_core_active
+                + idle * self.p_core_idle)
+
+
+@dataclass(frozen=True)
+class SwitchPowerProfile:
+    """Cisco WS-C2960-24-S calibration from the paper's §V-B: measured base
+    14.7 W plus 0.23 W per active port."""
+
+    p_chassis: float = 14.7
+    p_port_active: float = 0.23
+    p_port_lpi: float = 0.023       # ~10% of active, 802.3az ballpark
+    p_port_off: float = 0.0
+    p_linecard_active: float = 0.0  # folded into chassis for small switches
+    p_linecard_sleep: float = 0.0
+    t_lpi_wake: float = 5.0e-6      # 802.3az refresh/wake ~ microseconds
+    t_port_lpi_enter: float = 1.0e-3  # idle threshold before entering LPI
+    t_switch_wake: float = 0.5      # waking a slept switch (case study D)
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Static shape/topology/policy configuration (hashable; jit-static)."""
+
+    n_servers: int = 50
+    n_cores: int = 4
+    local_q: int = 64               # per-server ring-buffer capacity
+    global_q: int = 256
+    max_jobs: int = 2048
+    tasks_per_job: int = 1          # T (padded DAG width)
+    max_children: int = 4           # Dmax fanout per task
+    max_flows: int = 256            # concurrent network flows
+    max_events: int = 50_000        # scan iteration budget
+    ready_per_step: int = 8         # bounded ready->enqueue work per step
+    # policies
+    sched_policy: int = SchedPolicy.LOAD_BALANCE
+    sleep_policy: int = SleepPolicy.ALWAYS_ON
+    sleep_state: int = SrvState.S3  # which state the timer drops into
+    use_global_queue: bool = False
+    # provisioning thresholds (case A): load per enabled server
+    prov_lo: float = 0.3
+    prov_hi: float = 0.9
+    # WASP thresholds (case C): pending jobs per server
+    wasp_t_wakeup: float = 1.5
+    wasp_t_sleep: float = 0.5
+    # frequency scaling (P-state): service time scales by 1/freq
+    core_freq: float = 1.0
+    # network
+    has_network: bool = False
+    flow_mtu: float = 1500.0
+    comm_model: int = 0             # 0=flow(fluid), 1=packet(store&forward)
+    hop_latency: float = 5.0e-6     # per-hop switching latency (packet model)
+    # power profiles
+    server_power: ServerPowerProfile = field(default_factory=ServerPowerProfile)
+    switch_power: SwitchPowerProfile = field(default_factory=SwitchPowerProfile)
+    time_dtype: Any = jnp.float32
+
+    @property
+    def n_tasks(self) -> int:
+        return self.max_jobs * self.tasks_per_job
+
+
+# --------------------------------------------------------------------------
+# dynamic state pytrees
+# --------------------------------------------------------------------------
+
+@pytree_dataclass
+class ServerFarm:
+    # cores
+    core_busy_until: jnp.ndarray    # (N, C) time current task completes, INF idle
+    core_task: jnp.ndarray          # (N, C) flat task id, -1 if none
+    # server-level power
+    srv_state: jnp.ndarray          # (N,) SrvState
+    srv_wake_at: jnp.ndarray        # (N,) wake completion time (INF otherwise)
+    srv_idle_since: jnp.ndarray     # (N,) time the server last went fully idle
+    srv_tau: jnp.ndarray            # (N,) delay-timer value (INF = never sleep)
+    srv_pool: jnp.ndarray           # (N,) 0 active pool / 1 sleep pool (WASP)
+    srv_enabled: jnp.ndarray        # (N,) bool: receives new work (case A)
+    # local ring queues
+    q_tasks: jnp.ndarray            # (N, Q) flat task ids
+    q_head: jnp.ndarray             # (N,)
+    q_len: jnp.ndarray              # (N,)
+    # stats
+    energy: jnp.ndarray             # (N,) joules
+    residency: jnp.ndarray          # (N, SrvState.NUM) seconds per state
+    busy_core_seconds: jnp.ndarray  # (N,)
+    wake_count: jnp.ndarray         # (N,) number of sleep->active transitions
+    dropped: jnp.ndarray            # () tasks dropped on full queues
+
+
+@pytree_dataclass
+class JobTable:
+    arrival: jnp.ndarray            # (J,) job arrival times (INF padded)
+    arr_ptr: jnp.ndarray            # () next arrival index
+    service: jnp.ndarray            # (J*T,) task service time @ freq 1.0
+    valid: jnp.ndarray              # (J*T,) bool
+    dep_count: jnp.ndarray          # (J*T,) unfinished parents
+    children: jnp.ndarray           # (J*T, Dmax) flat child ids (-1 pad)
+    edge_bytes: jnp.ndarray         # (J*T, Dmax) result size to child
+    status: jnp.ndarray             # (J*T,) TaskStatus
+    edge_sent: jnp.ndarray          # (J*T, Dmax) network edge already handled
+    server: jnp.ndarray             # (J*T,) assigned server (-1 unassigned)
+    finish: jnp.ndarray             # (J*T,) task finish time
+    job_finish: jnp.ndarray         # (J,) completion time (INF if not done)
+    tasks_done: jnp.ndarray         # (J,) per-job finished-task count
+
+
+@pytree_dataclass
+class FlowTable:
+    src: jnp.ndarray                # (F,) source server
+    dst: jnp.ndarray                # (F,) destination server
+    rem: jnp.ndarray                # (F,) remaining bytes
+    rate: jnp.ndarray               # (F,) current share (bytes/s)
+    extra: jnp.ndarray              # (F,) fixed latency budget left (seconds)
+    done_at: jnp.ndarray            # (F,) projected completion (INF inactive)
+    child: jnp.ndarray              # (F,) task whose dep_count decrements
+    active: jnp.ndarray             # (F,) bool
+
+
+@pytree_dataclass
+class NetState:
+    port_state: jnp.ndarray         # (W, P) PortState
+    port_idle_since: jnp.ndarray    # (W, P)
+    lc_state: jnp.ndarray           # (W, LC) LinecardState
+    sw_awake: jnp.ndarray           # (W,) bool (case D switch sleeping)
+    link_flows: jnp.ndarray         # (L,) active flow count per link
+    sw_energy: jnp.ndarray          # (W,) joules
+    port_residency: jnp.ndarray     # (W, P, PortState.NUM)
+
+
+@pytree_dataclass
+class SchedState:
+    rr_ptr: jnp.ndarray             # () round-robin pointer
+    n_enabled: jnp.ndarray          # () provisioning active-set size
+    gq_tasks: jnp.ndarray           # (GQ,) global queue ring
+    gq_head: jnp.ndarray            # ()
+    gq_len: jnp.ndarray             # ()
+
+
+@pytree_dataclass
+class SimState:
+    t: jnp.ndarray                  # () current simulation time
+    farm: ServerFarm
+    jobs: JobTable
+    flows: FlowTable
+    net: NetState
+    sched: SchedState
+    events: jnp.ndarray             # () processed event count
+    done: jnp.ndarray               # () bool — all jobs finished
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def init_farm(cfg: SimConfig) -> ServerFarm:
+    N, C, Q = cfg.n_servers, cfg.n_cores, cfg.local_q
+    tdt = cfg.time_dtype
+    return ServerFarm(
+        core_busy_until=jnp.full((N, C), INF, tdt),
+        core_task=jnp.full((N, C), -1, jnp.int32),
+        srv_state=jnp.full((N,), SrvState.IDLE, jnp.int32),
+        srv_wake_at=jnp.full((N,), INF, tdt),
+        srv_idle_since=jnp.zeros((N,), tdt),
+        srv_tau=jnp.full((N,), INF, tdt),
+        srv_pool=jnp.zeros((N,), jnp.int32),
+        srv_enabled=jnp.ones((N,), bool),
+        q_tasks=jnp.full((N, Q), -1, jnp.int32),
+        q_head=jnp.zeros((N,), jnp.int32),
+        q_len=jnp.zeros((N,), jnp.int32),
+        energy=jnp.zeros((N,), jnp.float32),
+        residency=jnp.zeros((N, SrvState.NUM), jnp.float32),
+        busy_core_seconds=jnp.zeros((N,), jnp.float32),
+        wake_count=jnp.zeros((N,), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_flows(cfg: SimConfig) -> FlowTable:
+    F = cfg.max_flows
+    tdt = cfg.time_dtype
+    return FlowTable(
+        src=jnp.full((F,), -1, jnp.int32),
+        dst=jnp.full((F,), -1, jnp.int32),
+        rem=jnp.zeros((F,), jnp.float32),
+        rate=jnp.zeros((F,), jnp.float32),
+        extra=jnp.zeros((F,), tdt),
+        done_at=jnp.full((F,), INF, tdt),
+        child=jnp.full((F,), -1, jnp.int32),
+        active=jnp.zeros((F,), bool),
+    )
+
+
+def init_net(n_switches: int, n_ports: int, n_links: int,
+             n_linecards: int, cfg: SimConfig) -> NetState:
+    W, P, L = max(n_switches, 1), max(n_ports, 1), max(n_links, 1)
+    LC = max(n_linecards, 1)
+    tdt = cfg.time_dtype
+    return NetState(
+        port_state=jnp.full((W, P), PortState.LPI, jnp.int32),
+        port_idle_since=jnp.zeros((W, P), tdt),
+        lc_state=jnp.full((W, LC), LinecardState.ACTIVE, jnp.int32),
+        sw_awake=jnp.ones((W,), bool),
+        link_flows=jnp.zeros((L,), jnp.int32),
+        sw_energy=jnp.zeros((W,), jnp.float32),
+        port_residency=jnp.zeros((W, P, PortState.NUM), jnp.float32),
+    )
+
+
+def init_sched(cfg: SimConfig) -> SchedState:
+    return SchedState(
+        rr_ptr=jnp.zeros((), jnp.int32),
+        n_enabled=jnp.asarray(cfg.n_servers, jnp.int32),
+        gq_tasks=jnp.full((cfg.global_q,), -1, jnp.int32),
+        gq_head=jnp.zeros((), jnp.int32),
+        gq_len=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots, each with a jitted
+wrapper (ops.py) and a pure-jnp oracle (ref.py):
+
+  flash_attention  prefill/train attention (causal, sliding-window,
+                   softcap, GQA) — streaming softmax, VMEM-resident scores
+  ssm_scan         selective-SSM recurrence (hymba) — state in VMEM
+                   scratch across sequential time chunks
+  dcsim_step       the simulator's fused farm-advance (min + energy +
+                   completion) — the TPU analogue of the event-queue pop
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,103 @@
+"""Fused data-center-simulator advance Pallas TPU kernel.
+
+The engine's hot loop (core/engine.sim_step) streams the whole farm state
+from HBM several times per event: once for the min-reduction, once for
+energy accrual, once for the completion update.  This kernel fuses the
+"advance farm to t_next" into a single VMEM pass over server blocks:
+
+  per server block (block_n, C):
+    busy count -> piecewise power -> energy += P·dt, busy_seconds += busy·dt
+    completions (busy_until <= t_next) freed to INF, mask emitted
+
+It is the TPU analogue of the paper's event-queue pop + clock advance —
+O(state) streaming with everything fused at VPU width, instead of a heap's
+pointer chasing (DESIGN.md §3.4).
+
+Oracle: ref.dcsim_advance_reference; swept in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF = 1.0e30
+
+
+def _kernel(t_ref, tn_ref, busy_ref, state_ref, energy_ref, bsec_ref,
+            ptab_ref, new_busy_ref, done_ref, new_energy_ref, new_bsec_ref,
+            *, p_core_active, p_core_idle, n_cores):
+    dt = (tn_ref[0] - t_ref[0]).astype(jnp.float32)
+    cb = busy_ref[...]                                    # (bn, C)
+    st = state_ref[...]                                   # (bn,)
+    busy = (cb < INF).astype(jnp.float32).sum(axis=1)     # (bn,)
+    awake = st <= 1
+    p_awake = ptab_ref[0] + busy * p_core_active \
+        + (n_cores - busy) * p_core_idle
+    p_state = ptab_ref[jnp.clip(st, 0, ptab_ref.shape[0] - 1)]
+    p = jnp.where(awake, p_awake, p_state)
+    new_energy_ref[...] = energy_ref[...] + p * dt
+    new_bsec_ref[...] = bsec_ref[...] + busy * dt
+    done = cb <= tn_ref[0]
+    done_ref[...] = done.astype(jnp.int8)
+    new_busy_ref[...] = jnp.where(done, INF, cb)
+
+
+def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
+                  state_power, p_core_active, p_core_idle, *,
+                  block_n=256, interpret=False):
+    """Fused farm advance.  core_busy (N, C) f32; srv_state (N,) int32;
+    energy/busy_seconds (N,) f32; t/t_next scalars; state_power
+    (SrvState.NUM,) f32 table (index 0 = base power of an awake server).
+
+    Returns (new_core_busy, done_mask (N, C) bool, energy, busy_seconds).
+    """
+    N, C = core_busy.shape
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    if pad:
+        core_busy = jnp.pad(core_busy, ((0, pad), (0, 0)),
+                            constant_values=INF)
+        srv_state = jnp.pad(srv_state, (0, pad), constant_values=4)  # OFF
+        energy = jnp.pad(energy, (0, pad))
+        busy_seconds = jnp.pad(busy_seconds, (0, pad))
+    Np = N + pad
+    grid = (Np // block_n,)
+
+    kernel = functools.partial(_kernel, p_core_active=p_core_active,
+                               p_core_idle=p_core_idle, n_cores=C)
+    t1 = jnp.asarray(t, jnp.float32).reshape(1)
+    t2 = jnp.asarray(t_next, jnp.float32).reshape(1)
+
+    nb, dm, en, bs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                    # t
+            pl.BlockSpec((1,), lambda i: (0,)),                    # t_next
+            pl.BlockSpec((block_n, C), lambda i: (i, 0)),          # busy
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # state
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # energy
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # bsec
+            pl.BlockSpec((state_power.shape[0],), lambda i: (0,)),  # table
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, C), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, C), core_busy.dtype),
+            jax.ShapeDtypeStruct((Np, C), jnp.int8),
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(t1, t2, core_busy, srv_state, energy, busy_seconds, state_power)
+    return (nb[:N], dm[:N].astype(bool), en[:N], bs[:N])

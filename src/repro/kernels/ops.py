@@ -1,0 +1,55 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute under ``interpret=True`` (Pallas
+interpreter runs the kernel body in Python for correctness); on a real TPU
+set ``interpret=False`` (default resolved from the backend) to get the
+Mosaic-compiled kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import dcsim_step as _dc
+from . import flash_attention as _fa
+from . import ssm_scan as _ssm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk_t",
+                                             "interpret"))
+def ssm_scan(dt, Bm, Cm, x, A, *, block_d=256, chunk_t=16, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ssm.ssm_scan(dt, Bm, Cm, x, A, block_d=block_d, chunk_t=chunk_t,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("p_core_active", "p_core_idle",
+                                             "block_n", "interpret"))
+def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
+                  state_power, *, p_core_active=13.0, p_core_idle=2.0,
+                  block_n=256, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _dc.dcsim_advance(core_busy, srv_state, energy, busy_seconds,
+                             t, t_next, state_power,
+                             p_core_active, p_core_idle,
+                             block_n=block_n, interpret=interpret)

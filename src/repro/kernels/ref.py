@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references
+used by tests/test_kernels.py)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q (B, H, Sq, hd); k/v (B, KV, Skv, hd).  Dense softmax attention."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) / math.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ssm_scan_reference(dt, Bm, Cm, x, A):
+    """Selective-SSM recurrence (the lax.scan in models/ssm.py).
+
+    dt/x (B, S, Dss); Bm/Cm (B, S, N); A (Dss, N) negative reals.
+    Returns (y (B, S, Dss), h_final (B, Dss, N)); f32 state."""
+    B, S, Dss = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        dt_t, B_t, C_t, x_t = inp
+        da = jnp.exp(dt_t[..., None] * A[None])
+        h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, Dss, N), jnp.float32)
+    xs = (dt.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32),
+          x.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h
+
+
+def dcsim_advance_reference(core_busy, srv_state, energy, busy_seconds,
+                            t, t_next, state_power, p_core_active,
+                            p_core_idle, inf=1.0e30):
+    """One fused engine advance (the hot loop of core/engine.sim_step):
+
+      dt      = t_next - t
+      power_i = table[state_i] + busy_i·p_act + idle_i·p_idle  (awake only)
+      energy += power·dt ; busy_seconds += busy_i·dt
+      completions: core slots with busy_until <= t_next -> freed (inf)
+
+    Returns (new_core_busy, done_mask, energy, busy_seconds)."""
+    dt = (t_next - t).astype(jnp.float32)
+    C = core_busy.shape[1]
+    busy = (core_busy < inf).sum(axis=1).astype(jnp.float32)
+    awake = srv_state <= 1                       # ACTIVE=0 / IDLE=1
+    p_awake = state_power[0] + busy * p_core_active \
+        + (C - busy) * p_core_idle
+    p = jnp.where(awake, p_awake, state_power[jnp.clip(srv_state, 0, 5)])
+    energy = energy + p * dt
+    busy_seconds = busy_seconds + busy * dt
+    done = core_busy <= t_next
+    new_busy = jnp.where(done, inf, core_busy)
+    return new_busy, done, energy, busy_seconds

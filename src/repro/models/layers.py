@@ -1,0 +1,287 @@
+"""Neural-net layer primitives shared by every assigned architecture.
+
+Everything is a pure function of (params, inputs); parameters are plain
+pytrees created in ``transformer.make_params``.  Attention is written in a
+query-chunked streaming form so that no S×S score tensor is ever fully
+materialized — at 32k context a dense score tensor would be ~17 GB/device,
+far beyond VMEM/HBM budgets, while a 512-query chunk stays in the tens of MB.
+This jnp path is also the correctness oracle for the Pallas flash kernel
+(kernels/flash_attention.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms / activations / positional encodings
+# --------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(
+        jax.nn.gelu, approximate=True)}[name]
+
+
+def softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+def rope_freqs(positions, head_dim, theta):
+    """positions (...,) int -> (..., head_dim/2) angles."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x, positions, theta):
+    """x (..., S, H, hd), positions (..., S)."""
+    ang = rope_freqs(positions, x.shape[-1], theta)      # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq, dim, dtype=jnp.float32):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# dense MLP (gated SiLU or plain GELU)
+# --------------------------------------------------------------------------
+
+def mlp(p, x, act="silu"):
+    if act == "silu":                                    # gated SiLU
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif act == "geglu":                                 # gated GELU (gemma)
+        h = act_fn("gelu")(x @ p["wg"]) * (x @ p["wu"])
+    else:                                                # plain GELU
+        h = act_fn(act)(x @ p["wu"])
+    return h @ p["wd"]
+
+
+# --------------------------------------------------------------------------
+# attention — streaming query-chunked implementation
+# --------------------------------------------------------------------------
+
+def _qk_norm(q, k, p, eps):
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], eps)
+        k = rms_norm(k, p["k_norm"], eps)
+    return q, k
+
+
+def qkv_proj(p, x, cfg):
+    B, S, D = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.attn_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q, k = _qk_norm(q, k, p, cfg.norm_eps)
+    return q, k, v
+
+
+def attend(q, k, v, *, causal, q_offset=0, window=0, attn_softcap=0.0,
+           chunk=512, kv_positions=None, bf16_scores=False):
+    """Streaming GQA attention.
+
+    q (B, Sq, H, hd); k/v (B, Skv, KV, hd) with H % KV == 0 — the group
+    broadcast happens inside the einsum (never materialized: a repeated KV
+    cache would cost H/KV× the cache bytes).  Scores accumulate in f32 via
+    ``preferred_element_type`` while K/V stay in their storage dtype (an f32
+    copy of a 32k cache would double decode HBM).
+
+    ``q_offset`` is the absolute position of q[:, 0] relative to k[:, 0]
+    (prefill: 0; decode: cache length).  ``window`` > 0 restricts each query
+    to the last ``window`` keys (sliding-window attention).
+    ``kv_positions`` (B, Skv) overrides key absolute positions (ring caches).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if not chunk:
+        chunk = Sq
+    scale = 1.0 / math.sqrt(hd)
+    if kv_positions is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(Skv)[None, :], (B, Skv))
+    else:
+        kv_pos = kv_positions
+
+    n_chunks = max(1, -(-Sq // chunk))
+    pad = n_chunks * chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    # (n_chunks, B, KV, G, chunk, hd)
+    qc = qp.reshape(B, n_chunks, chunk, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+
+    def _mask_bias(ci):
+        """Single additive (B,1,1,chunk,Skv) bias — one select instead of a
+        chain of boolean selects over the f32 score tensor."""
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)        # (chunk,)
+        m = (kv_pos >= 0)[:, None, None, None, :]               # ring valid
+        if causal:
+            m &= kv_pos[:, None, None, None, :] <= qpos[None, None, None,
+                                                        :, None]
+        if window:
+            m &= kv_pos[:, None, None, None, :] > qpos[None, None, None,
+                                                       :, None] - window
+        return m
+
+    def one_chunk(ci, qi):
+        s = jnp.einsum("bkgqd,bskd->bkgqs", qi, k,
+                       preferred_element_type=jnp.float32) * scale
+        if attn_softcap:
+            s = softcap(s, attn_softcap)
+        m = _mask_bias(ci)
+        if bf16_scores:
+            # halve score-tensor HBM traffic: bf16 scores/probs, f32 stats
+            # (the Pallas flash kernel subsumes this entirely on TPU)
+            sb = jnp.where(m, s, NEG_INF).astype(jnp.bfloat16)
+            mx = jnp.max(sb, axis=-1, keepdims=True)
+            p = jnp.exp(sb - mx)
+            l = jnp.sum(p, axis=-1, keepdims=True,
+                        dtype=jnp.float32)
+            out = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                             preferred_element_type=jnp.float32)
+            return out / l.astype(jnp.float32)
+        s = jnp.where(m, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+    if n_chunks == 1:
+        out = one_chunk(0, qc[0])[None]
+    else:
+        out = jax.lax.map(lambda args: one_chunk(*args),
+                          (jnp.arange(n_chunks), qc))
+    # (n_chunks, B, KV, G, chunk, hd) -> (B, Sq, H, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, n_chunks * chunk, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_block(p, x, cfg, *, kind, mode, cache=None, pos=0,
+                    mesh=None, mesh_axes=("data", "model")):
+    """Self-attention mixer.  kind in {attn, swa, enc}; mode in {train,
+    prefill, decode}.  Returns (out, new_cache).
+
+    Caches hold *rotated* keys plus the absolute position of each slot
+    (``pos_ids``; -1 = empty).  Sliding-window caches are rings of size W
+    written at ``pos % W``; full caches are written at ``pos``.
+    """
+    B, S, D = x.shape
+    window = cfg.sliding_window if kind in ("swa", "hymba") else 0
+    q, k, v = qkv_proj(p, x, cfg)
+
+    if cfg.skip_attention and mode != "decode":
+        # roofline ablation probe: projections kept, the S×S score/softmax
+        # subgraph removed — its byte/FLOP share is measured by difference
+        G = cfg.n_heads // cfg.n_kv_heads
+        out = jnp.repeat(v, G, axis=2).astype(q.dtype)
+        out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+        return out @ p["wo"], None
+
+    if mode == "decode":
+        if cfg.pos == "rope":
+            q = apply_rope(q, jnp.full((B, S), pos), cfg.rope_theta)
+            k = apply_rope(k, jnp.full((B, S), pos), cfg.rope_theta)
+        cache_k, cache_v, slot_pos = cache["k"], cache["v"], cache["pos_ids"]
+        W = cache_k.shape[1]
+        slot = jnp.asarray(pos) % W if window else jnp.asarray(pos)
+        # flash-decode layout: the long cache is sequence-sharded over
+        # "model"; replicate the (tiny) q/k/v over "model" so the cache
+        # update and the score/softmax/value contractions stay S-local and
+        # only (B,H)-sized softmax stats and the (B,1,H,hd) partial output
+        # cross the ICI.  Without these constraints SPMD reshards
+        # (all-gathers) the multi-GB cache every decoded token.
+        seq_shard = (mesh is not None and not window
+                     and "model" in mesh.axis_names
+                     and mesh.shape["model"] > 1)
+        if seq_shard:
+            from jax.sharding import PartitionSpec as _P
+            bax = mesh_axes[:-1]
+            bspec = bax[0] if len(bax) == 1 else tuple(bax)
+            rep = _P(bspec, None, None, None)
+            q, k, v = (jax.lax.with_sharding_constraint(t, rep)
+                       for t in (q, k, v))
+            seq = _P(bspec, "model", None, None)
+            cache_k = jax.lax.with_sharding_constraint(cache_k, seq)
+            cache_v = jax.lax.with_sharding_constraint(cache_v, seq)
+            slot_pos = jax.lax.with_sharding_constraint(
+                slot_pos, _P(bspec, "model"))
+        # elementwise select instead of dynamic_update_slice: a DUS into the
+        # sequence dim would force SPMD to rematerialize the (sharded) cache
+        # every step; where(iota==slot, ...) partitions cleanly.
+        sel = (jnp.arange(W) == slot)[None, :, None, None]
+        cache_k = jnp.where(sel, k.astype(cache_k.dtype), cache_k)
+        cache_v = jnp.where(sel, v.astype(cache_v.dtype), cache_v)
+        slot_pos = jnp.where(sel[..., 0, 0],
+                             jnp.asarray(pos, slot_pos.dtype), slot_pos)
+        out = attend(q, cache_k, cache_v, causal=True, q_offset=pos,
+                     window=window,
+                     attn_softcap=cfg.attn_softcap, kv_positions=slot_pos,
+                     chunk=cfg.attn_chunk,
+                     bf16_scores=cfg.attn_bf16_scores)
+        if seq_shard:
+            # stop the wo-matmul's head sharding from propagating back into
+            # the S-sharded cache via the value contraction
+            out = jax.lax.with_sharding_constraint(out, rep)
+        new_cache = {"k": cache_k, "v": cache_v, "pos_ids": slot_pos}
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.pos == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        out = attend(q, k, v, causal=kind != "enc", window=window,
+                     attn_softcap=cfg.attn_softcap, chunk=cfg.attn_chunk,
+                     bf16_scores=cfg.attn_bf16_scores)
+        if mode == "prefill" and cache is not None:
+            W = cache["k"].shape[1]
+            if W <= S:                                  # keep the last W,
+                ks, vs, ps = k[:, -W:], v[:, -W:], positions[:, -W:]
+                if S % W:                               # ring-aligned so that
+                    shift = S % W                       # slot == pos % W
+                    ks = jnp.roll(ks, shift, axis=1)
+                    vs = jnp.roll(vs, shift, axis=1)
+                    ps = jnp.roll(ps, shift, axis=1)
+            else:                                       # right-pad to W
+                padk = ((0, 0), (0, W - S), (0, 0), (0, 0))
+                ks, vs = jnp.pad(k, padk), jnp.pad(v, padk)
+                ps = jnp.pad(positions, ((0, 0), (0, W - S)),
+                             constant_values=-1)
+            new_cache = {"k": ks.astype(cache["k"].dtype),
+                         "v": vs.astype(cache["v"].dtype),
+                         "pos_ids": ps.astype(jnp.int32)}
+        else:
+            new_cache = None
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ p["wo"], new_cache
+
+
+def cross_attention(p, x, enc_k, enc_v, cfg):
+    """Decoder->encoder cross attention (whisper).  enc_k/v are already
+    projected per layer: (B, Senc, H, hd)."""
+    B, S, D = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    out = attend(q, enc_k, enc_v, causal=False)
+    return out.reshape(B, S, -1) @ p["wo"]

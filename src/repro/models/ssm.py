@@ -1,0 +1,252 @@
+"""State-space / recurrent mixers: Mamba-style selective SSM (hymba),
+and the two xLSTM blocks (mLSTM matrix memory, sLSTM scalar memory).
+
+Training/prefill forms:
+  * mamba  — linear time-variant SSM, lax.scan over time (the associative
+    -scan variant is a hillclimb lever; see kernels/ssm_scan.py for the
+    Pallas chunked version).
+  * mlstm  — stabilized parallel (quadratic) form with query chunking, the
+    xLSTM paper's training formulation.
+  * slstm  — true recurrence (scan over time; not parallelizable — that is
+    why xLSTM alternates it with mLSTM blocks).
+
+Decode forms are all O(1)-state single steps, which is what makes the
+long_500k shape feasible for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import NEG_INF
+
+
+# --------------------------------------------------------------------------
+# Mamba-style selective SSM
+# --------------------------------------------------------------------------
+
+def ssm_init_state(cfg, B, dtype):
+    Dss, N, K = cfg.d_ssm, cfg.ssm_state, cfg.ssm_conv
+    return {"conv": jnp.zeros((B, K - 1, Dss), dtype),
+            "h": jnp.zeros((B, Dss, N), jnp.float32)}
+
+
+def _ssm_proj(p, x, cfg):
+    xz = x @ p["in_proj"]
+    return jnp.split(xz, 2, axis=-1)                    # x_in, z
+
+
+def _causal_conv(x, w, prev=None):
+    """Depthwise causal conv.  x (B, S, Dss), w (K, Dss); prev (B, K-1, Dss)
+    left context for decode."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out, xp[:, -(K - 1):]
+
+
+def _ssm_coeffs(p, xc, cfg):
+    dt = jax.nn.softplus(xc * p["dt_w"] + p["dt_b"]).astype(jnp.float32)
+    Bm = (xc @ p["w_B"]).astype(jnp.float32)            # (..., N)
+    Cm = (xc @ p["w_C"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (Dss, N)
+    return dt, Bm, Cm, A
+
+
+def mamba_mixer(p, x, cfg, mode="train", state=None):
+    """x (B, S, D) -> (out, new_state)."""
+    B, S, D = x.shape
+    x_in, z = _ssm_proj(p, x, cfg)
+    prev = state["conv"] if mode == "decode" else None
+    xc, conv_tail = _causal_conv(x_in, p["conv_w"], prev)
+    xc = jax.nn.silu(xc + p["conv_b"])
+    dt, Bm, Cm, A = _ssm_coeffs(p, xc, cfg)
+    xf = xc.astype(jnp.float32)
+
+    if mode == "decode":                                # S == 1 single step
+        h = state["h"]
+        da = jnp.exp(dt[:, 0, :, None] * A[None])       # (B, Dss, N)
+        h = da * h + (dt[:, 0] * xf[:, 0])[..., None] * Bm[:, 0][:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None, :]
+        new_state = {"conv": conv_tail, "h": h}
+    else:
+        def step(h, inp):
+            dt_t, B_t, C_t, x_t = inp                   # (B,Dss),(B,N),(B,N),(B,Dss)
+            da = jnp.exp(dt_t[..., None] * A[None])     # (B, Dss, N)
+            h = da * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y
+
+        h0 = jnp.zeros((B, cfg.d_ssm, cfg.ssm_state), jnp.float32)
+        xs = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+              Cm.transpose(1, 0, 2), xf.transpose(1, 0, 2))
+        h, ys = jax.lax.scan(step, h0, xs)
+        y = ys.transpose(1, 0, 2)                       # (B, S, Dss)
+        new_state = {"conv": conv_tail, "h": h} if mode == "prefill" else None
+
+    y = y + xf * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], new_state
+
+
+# --------------------------------------------------------------------------
+# mLSTM — matrix memory with exponential gating (xLSTM)
+# --------------------------------------------------------------------------
+
+def mlstm_init_state(cfg, B, dtype):
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {"C": jnp.zeros((B, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((B, H, hd), jnp.float32),
+            "m": jnp.full((B, H), 0.0, jnp.float32)}
+
+
+def _mlstm_qkvg(p, x, cfg):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (x @ p["wv"]).reshape(B, S, H, hd)
+    i_t = (x @ p["wi"]).astype(jnp.float32)             # (B, S, H)
+    f_t = (x @ p["wf"]).astype(jnp.float32)
+    o_t = jax.nn.sigmoid(x @ p["wo_gate"]).reshape(B, S, H, hd)
+    return q, k, v, i_t, f_t, o_t
+
+
+def mlstm_mixer(p, x, cfg, mode="train", state=None, chunk=None):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    if chunk is None:
+        chunk = cfg.attn_chunk or S
+    q, k, v, i_t, f_t, o_t = _mlstm_qkvg(p, x, cfg)
+    logf = jax.nn.log_sigmoid(f_t)                      # (B, S, H)
+
+    if mode == "decode":
+        C, n, m = state["C"], state["n"], state["m"]
+        lf, it = logf[:, 0], i_t[:, 0]                  # (B, H)
+        m_new = jnp.maximum(lf + m, it)
+        fp = jnp.exp(lf + m - m_new)[..., None]         # (B, H, 1)
+        ip = jnp.exp(it - m_new)[..., None]
+        k0 = k[:, 0].astype(jnp.float32)                # (B, H, hd)
+        v0 = v[:, 0].astype(jnp.float32)
+        C = fp[..., None] * C + ip[..., None] * jnp.einsum(
+            "bhd,bhe->bhde", v0, k0)
+        n = fp * n + ip * k0
+        qh = q[:, 0].astype(jnp.float32)                # (B, H, hd)
+        num = jnp.einsum("bhde,bhe->bhd", C, qh)
+        # stabilized state: C̃ = e^{-m} C, so the |n·q| >= 1 floor becomes
+        # e^{-m} in the scaled system (matches the parallel form exactly)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qh)),
+                          jnp.exp(-m_new))[..., None]
+        h = (num / den)[:, None].reshape(B, 1, H, hd)
+        out = (h * o_t).reshape(B, 1, H * hd).astype(x.dtype)
+        new_state = {"C": C, "n": n, "m": m_new}
+        return out @ p["out_proj"], new_state
+
+    # parallel (quadratic) stabilized form, chunked over queries
+    cum = jnp.cumsum(logf, axis=1)                       # (B, S, H)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    n_chunks = max(1, -(-S // chunk))
+    pad = n_chunks * chunk - S
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cum_q = jnp.pad(cum, ((0, 0), (0, pad), (0, 0)))
+    else:
+        cum_q = cum
+    qc = qf.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    cq = cum_q.reshape(B, n_chunks, chunk, H).transpose(1, 0, 3, 2)
+
+    t_idx = jnp.arange(S)
+
+    cum_keys = cum.transpose(0, 2, 1)[:, :, None, :]     # (B, H, 1, S)
+    i_keys = i_t.transpose(0, 2, 1)[:, :, None, :]       # (B, H, 1, S)
+
+    def one_chunk(ci, qi, cqi):
+        # D̃[t, s] = cum_f[t] - cum_f[s] + ĩ[s]   for s <= t
+        qpos = ci * chunk + jnp.arange(chunk)
+        dmat = cqi[..., None] - cum_keys + i_keys        # (B, H, chunk, S)
+        mask = t_idx[None, None, None, :] <= qpos[None, None, :, None]
+        dmat = jnp.where(mask, dmat, NEG_INF)
+        mrow = jnp.maximum(jnp.max(dmat, axis=-1), 0.0)  # stabilizer
+        w = jnp.exp(dmat - mrow[..., None])
+        s = jnp.einsum("bhqd,bshd->bhqs", qi, kf) * w
+        den = jnp.maximum(jnp.abs(s.sum(-1)), jnp.exp(-mrow))[..., None]
+        return jnp.einsum("bhqs,bshd->bhqd", s, vf) / den
+
+    if n_chunks == 1:
+        out = one_chunk(0, qc[0], cq[0])[None]
+    else:
+        out = jax.lax.map(lambda a: one_chunk(*a),
+                          (jnp.arange(n_chunks), qc, cq))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, n_chunks * chunk, H, hd)
+    out = (out[:, :S] * o_t.astype(jnp.float32)).reshape(B, S, H * hd)
+    new_state = None
+    if mode == "prefill":                                # build final state
+        new_state = _mlstm_state_from_seq(kf, vf, i_t, logf, cum, B, H, hd)
+    return out.astype(x.dtype) @ p["out_proj"], new_state
+
+
+def _mlstm_state_from_seq(kf, vf, i_t, logf, cum, B, H, hd):
+    """Final (C, n, m) after consuming the whole sequence — O(S) einsum."""
+    S = kf.shape[1]
+    tot = cum[:, -1]                                     # (B, H)
+    w_log = tot[:, None, :] - cum + i_t                  # (B, S, H)
+    m = jnp.maximum(jnp.max(w_log, axis=1), 0.0)         # (B, H)
+    w = jnp.exp(w_log - m[:, None, :])                   # (B, S, H)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", w, vf, kf)
+    n = jnp.einsum("bsh,bshd->bhd", w, kf)
+    return {"C": C, "n": n, "m": m}
+
+
+# --------------------------------------------------------------------------
+# sLSTM — scalar memory, true recurrence
+# --------------------------------------------------------------------------
+
+def slstm_init_state(cfg, B, dtype):
+    D = cfg.d_model
+    z = jnp.zeros((B, D), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_mixer(p, x, cfg, mode="train", state=None):
+    """Block-diagonal recurrent sLSTM.  x (B, S, D)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xw = (x @ p["W"]).astype(jnp.float32) + p["b"].astype(jnp.float32)
+
+    R = p["R"].astype(jnp.float32)                       # (H, dh, 4*dh)
+
+    def step(carry, xw_t):
+        h, c, n, m = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, R).reshape(B, 4 * D)
+        g = xw_t + rec
+        zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        m_new = jnp.maximum(ft + m, it)                  # exp gating, f̃ pre-act
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c = fp * c + ip * zt
+        n = fp * n + ip
+        h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (h, c, n, m_new), h
+
+    if mode == "decode":
+        carry = (state["h"], state["c"], state["n"], state["m"])
+        carry, h = step(carry, xw[:, 0])
+        out = h[:, None, :]
+        new_state = dict(zip(("h", "c", "n", "m"), carry))
+    else:
+        init = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+        carry, hs = jax.lax.scan(step, init, xw.transpose(1, 0, 2))
+        out = hs.transpose(1, 0, 2)
+        new_state = dict(zip(("h", "c", "n", "m"), carry)) \
+            if mode == "prefill" else None
+    return out.astype(x.dtype) @ p["out_proj"], new_state

@@ -1,0 +1,555 @@
+"""Model assembly: parameters, caches, and the forward pass for every
+assigned architecture (decoder-only dense/MoE/hybrid/SSM, plus the
+whisper encoder-decoder and chameleon early-fusion variants).
+
+Layer stacking uses ``lax.scan`` over *periods* of the block pattern — a
+period is one repetition of ``cfg.block_pattern`` (e.g. (swa, attn) for
+gemma2) and every pattern position has its parameters stacked over
+``n_periods``.  Scanning keeps the HLO size O(period) instead of O(layers),
+which is what makes 94-layer × 512-device SPMD compiles tractable.
+
+Every parameter/cache tensor has a parallel *logical spec* — a tuple of
+logical axis names per dim — consumed by ``repro.sharding.partition`` to
+produce mesh ``PartitionSpec``s with divisibility fallbacks.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from . import layers, moe, ssm
+from .config import ModelConfig
+
+
+def _bspec(mesh_axes):
+    bax = mesh_axes[:-1]
+    return bax[0] if len(bax) == 1 else tuple(bax)
+
+
+def constrain_acts(x, mesh, mesh_axes):
+    """Pin activations to batch-sharded (B over pod/data, rest replicated).
+
+    XLA's gather partitioner cannot partition the embedding lookup (batch-
+    sharded indices × vocab-sharded table); it replicates the result, and
+    without a constraint the *batch-replicated* layout propagates through
+    the whole network (observed: 538 GB/device temp at llama-1b scale)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(_bspec(mesh_axes), *([None] * (x.ndim - 1))))
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+def cdtype(cfg):
+    return DTYPES[cfg.compute_dtype]
+
+
+def pdtype(cfg):
+    return DTYPES[cfg.param_dtype]
+
+
+# ==========================================================================
+# parameter initialization (+ logical specs)
+# ==========================================================================
+
+def _norm(key, shape, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def _dense(key, fan_in, shape, dtype):
+    return _norm(key, shape, 1.0 / math.sqrt(fan_in)).astype(dtype)
+
+
+def _attn_params(cfg, key, cross=False):
+    D, Qd, KVd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    p = {"wq": _dense(ks[0], D, (D, Qd), dt),
+         "wk": _dense(ks[1], D, (D, KVd), dt),
+         "wv": _dense(ks[2], D, (D, KVd), dt),
+         "wo": _dense(ks[3], Qd, (Qd, D), dt)}
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "kv"),
+         "wv": ("embed", "kv"), "wo": ("heads", "embed")}
+    if cfg.attn_bias and not cross:
+        p |= {"bq": jnp.zeros((Qd,), dt), "bk": jnp.zeros((KVd,), dt),
+              "bv": jnp.zeros((KVd,), dt)}
+        s |= {"bq": ("heads",), "bk": ("kv",), "bv": ("kv",)}
+    if cfg.qk_norm and not cross:
+        p |= {"q_norm": jnp.zeros((cfg.head_dim,), jnp.float32),
+              "k_norm": jnp.zeros((cfg.head_dim,), jnp.float32)}
+        s |= {"q_norm": (None,), "k_norm": (None,)}
+    return p, s
+
+
+def _mlp_params(cfg, key, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("silu", "geglu"):
+        p = {"wg": _dense(ks[0], D, (D, F), dt),
+             "wu": _dense(ks[1], D, (D, F), dt),
+             "wd": _dense(ks[2], F, (F, D), dt)}
+        s = {"wg": ("embed", "ff"), "wu": ("embed", "ff"),
+             "wd": ("ff", "embed")}
+    else:
+        p = {"wu": _dense(ks[1], D, (D, F), dt),
+             "wd": _dense(ks[2], F, (F, D), dt)}
+        s = {"wu": ("embed", "ff"), "wd": ("ff", "embed")}
+    return p, s
+
+
+def _moe_params(cfg, key):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    p = {"router": _dense(ks[0], D, (D, E), jnp.float32),
+         "wg": _dense(ks[1], D, (E, D, F), dt),
+         "wu": _dense(ks[2], D, (E, D, F), dt),
+         "wd": _dense(ks[3], F, (E, F, D), dt)}
+    s = {"router": ("embed", None),
+         "wg": ("expert", "embed", "e_ff"),
+         "wu": ("expert", "embed", "e_ff"),
+         "wd": ("expert", "e_ff", "embed")}
+    if cfg.n_shared_experts:
+        sp, ss = _mlp_params(cfg, ks[4],
+                             d_ff=cfg.n_shared_experts * cfg.d_expert)
+        p["shared"], s["shared"] = sp, ss
+    return p, s
+
+
+def _ssm_params(cfg, key):
+    D, Dss, N, K = cfg.d_model, cfg.d_ssm, cfg.ssm_state, cfg.ssm_conv
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (Dss, 1))
+    p = {"in_proj": _dense(ks[0], D, (D, 2 * Dss), dt),
+         "conv_w": _dense(ks[1], K, (K, Dss), dt),
+         "conv_b": jnp.zeros((Dss,), dt),
+         "dt_w": jnp.ones((Dss,), jnp.float32),
+         "dt_b": jnp.full((Dss,), -4.6, jnp.float32),   # softplus ~ 0.01
+         "w_B": _dense(ks[2], Dss, (Dss, N), dt),
+         "w_C": _dense(ks[3], Dss, (Dss, N), dt),
+         "A_log": jnp.log(a),
+         "d_skip": jnp.ones((Dss,), jnp.float32),
+         "out_proj": _dense(ks[4], Dss, (Dss, D), dt)}
+    s = {"in_proj": ("embed", "ssm"), "conv_w": (None, "ssm"),
+         "conv_b": ("ssm",), "dt_w": ("ssm",), "dt_b": ("ssm",),
+         "w_B": ("ssm", None), "w_C": ("ssm", None), "A_log": ("ssm", None),
+         "d_skip": ("ssm",), "out_proj": ("ssm", "embed")}
+    return p, s
+
+
+def _mlstm_params(cfg, key):
+    D, Qd, H = cfg.d_model, cfg.q_dim, cfg.n_heads
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 7)
+    p = {"wq": _dense(ks[0], D, (D, Qd), dt),
+         "wk": _dense(ks[1], D, (D, Qd), dt),
+         "wv": _dense(ks[2], D, (D, Qd), dt),
+         "wi": _dense(ks[3], D, (D, H), jnp.float32),
+         "wf": _dense(ks[4], D, (D, H), jnp.float32),
+         "wo_gate": _dense(ks[5], D, (D, Qd), dt),
+         "out_proj": _dense(ks[6], Qd, (Qd, D), dt)}
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "heads"),
+         "wv": ("embed", "heads"), "wi": ("embed", None),
+         "wf": ("embed", None), "wo_gate": ("embed", "heads"),
+         "out_proj": ("heads", "embed")}
+    return p, s
+
+
+def _slstm_params(cfg, key):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"W": _dense(ks[0], D, (D, 4 * D), dt),
+         "b": jnp.zeros((4 * D,), jnp.float32),
+         "R": _dense(ks[1], dh, (H, dh, 4 * dh), jnp.float32),
+         "out_proj": _dense(ks[2], D, (D, D), dt)}
+    s = {"W": ("embed", None), "b": (None,), "R": (None, None, None),
+         "out_proj": (None, "embed")}
+    return p, s
+
+
+_MIXERS = {"attn": _attn_params, "swa": _attn_params, "enc": _attn_params,
+           "mamba": _ssm_params, "mlstm": _mlstm_params,
+           "slstm": _slstm_params}
+
+
+def _block_params(cfg, kind, key, *, is_encoder=False):
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {"ln1": jnp.zeros((D,), jnp.float32)}
+    s = {"ln1": (None,)}
+    if kind == "hymba":
+        ap, asp = _attn_params(cfg, ks[0])
+        mp, msp = _ssm_params(cfg, ks[4])
+        p["mixer"] = {"attn": ap, "ssm": mp}
+        s["mixer"] = {"attn": asp, "ssm": msp}
+    else:
+        p["mixer"], s["mixer"] = _MIXERS[kind](cfg, ks[0])
+    if cfg.cross_attn and not is_encoder:
+        p["ln_x"] = jnp.zeros((D,), jnp.float32)
+        s["ln_x"] = (None,)
+        p["cross"], s["cross"] = _attn_params(cfg, ks[1], cross=True)
+        # encoder-side K/V projections for cross attention
+        dt = pdtype(cfg)
+        p["cross"]["wk"] = _dense(ks[2], D, (D, cfg.q_dim), dt)
+        p["cross"]["wv"] = _dense(ks[3], D, (D, cfg.q_dim), dt)
+        s["cross"]["wk"] = ("embed", "heads")
+        s["cross"]["wv"] = ("embed", "heads")
+    has_ffn = cfg.d_ff > 0 or cfg.is_moe
+    if has_ffn:
+        p["ln2"] = jnp.zeros((D,), jnp.float32)
+        s["ln2"] = (None,)
+        if cfg.is_moe and not is_encoder:
+            p["ffn"], s["ffn"] = _moe_params(cfg, ks[1] if not cfg.cross_attn
+                                             else ks[4])
+        else:
+            p["ffn"], s["ffn"] = _mlp_params(cfg, ks[1])
+    return p, s
+
+
+def _stack(cfg, kind, key, n, **kw):
+    keys = jax.random.split(key, n)
+    p0, s0 = _block_params(cfg, kind, keys[0], **kw)
+    stacked = jax.vmap(lambda k: _block_params(cfg, kind, k, **kw)[0])(keys)
+    specs = jax.tree.map(lambda sp: (None,) + tuple(sp), s0,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, specs
+
+
+def make_params(cfg: ModelConfig, key, max_seq: int = 0):
+    """Returns (params, specs) — specs mirror params with logical-axis
+    tuples per dim."""
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8 + len(cfg.block_pattern))
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"] = (_norm(ks[0], (cfg.vocab, cfg.d_model), 0.02)).astype(dt)
+    s["embed"] = ("vocab", "embed")
+    lp, lsp = [], []
+    for i, kind in enumerate(cfg.block_pattern):
+        bp, bs = _stack(cfg, kind, ks[1 + i], cfg.n_periods)
+        lp.append(bp)
+        lsp.append(bs)
+    p["layers"], s["layers"] = tuple(lp), tuple(lsp)
+    p["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    s["final_norm"] = (None,)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense(ks[-1], cfg.d_model,
+                              (cfg.d_model, cfg.vocab), dt)
+        s["lm_head"] = ("embed", "vocab")
+    if cfg.pos == "learned":
+        assert max_seq > 0, "learned positions need max_seq at init"
+        p["dec_pos"] = _norm(ks[-2], (max_seq, cfg.d_model), 0.02).astype(dt)
+        s["dec_pos"] = (None, "embed")
+    if cfg.is_enc_dec:
+        ep, es = _stack(cfg, "enc", ks[-3], cfg.enc_layers, is_encoder=True)
+        p["enc"] = {"layers": ep,
+                    "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+        s["enc"] = {"layers": es, "final_norm": (None,)}
+    return p, s
+
+
+# ==========================================================================
+# caches
+# ==========================================================================
+
+def cache_len_for(cfg, kind, S):
+    if kind in ("swa", "hymba") and cfg.sliding_window:
+        return min(cfg.sliding_window, S)
+    return S
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, dtype=None):
+    """Decoder state for serve_step: per pattern position, stacked over
+    periods.  Returns (cache, specs)."""
+    dt = dtype or cdtype(cfg)
+    P = cfg.n_periods
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    caches, specs = [], []
+    for kind in cfg.block_pattern:
+        c, sp = {}, {}
+        if kind in ("attn", "swa", "hymba"):
+            W = cache_len_for(cfg, kind, S)
+            full = kind == "attn"
+            c["k"] = jnp.zeros((P, B, W, kv, hd), dt)
+            c["v"] = jnp.zeros((P, B, W, kv, hd), dt)
+            c["pos_ids"] = jnp.full((P, B, W), -1, jnp.int32)
+            seq_ax = "kv_seq" if full else None
+            sp["k"] = (None, "batch", seq_ax, "kv_heads", None)
+            sp["v"] = (None, "batch", seq_ax, "kv_heads", None)
+            sp["pos_ids"] = (None, "batch", seq_ax)
+        if kind in ("hymba", "mamba"):
+            st = ssm.ssm_init_state(cfg, B, dt)
+            c["ssm"] = jax.tree.map(lambda a: jnp.tile(a[None], (P,) + (1,) *
+                                                       a.ndim), st)
+            sp["ssm"] = {"conv": (None, "batch", None, "ssm"),
+                         "h": (None, "batch", "ssm", None)}
+        if kind == "mlstm":
+            st = ssm.mlstm_init_state(cfg, B, dt)
+            c.update({k: jnp.tile(v[None], (P,) + (1,) * v.ndim)
+                      for k, v in st.items()})
+            sp.update({"C": (None, "batch", None, None, None),
+                       "n": (None, "batch", None, None),
+                       "m": (None, "batch", None)})
+        if kind == "slstm":
+            st = ssm.slstm_init_state(cfg, B, dt)
+            c.update({k: jnp.tile(v[None], (P, 1, 1)) for k, v in st.items()})
+            sp.update({k: (None, "batch", None) for k in st})
+        if cfg.cross_attn:
+            c["cross_k"] = jnp.zeros((P, B, cfg.enc_seq, cfg.n_heads, hd), dt)
+            c["cross_v"] = jnp.zeros((P, B, cfg.enc_seq, cfg.n_heads, hd), dt)
+            sp["cross_k"] = (None, "batch", None, None, None)
+            sp["cross_v"] = (None, "batch", None, None, None)
+        caches.append(c)
+        specs.append(sp)
+    return tuple(caches), tuple(specs)
+
+
+# ==========================================================================
+# forward pass
+# ==========================================================================
+
+def _apply_block(cfg, kind, p, x, *, mode, cache, pos, enc_out, mesh,
+                 mesh_axes):
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = {}
+    if kind in ("attn", "swa", "enc"):
+        mix, kv_cache = layers.attention_block(
+            p["mixer"], h, cfg, kind=kind, mode=mode, cache=cache, pos=pos,
+            mesh=mesh, mesh_axes=mesh_axes)
+        if kv_cache:
+            new_cache.update(kv_cache)
+    elif kind == "hymba":
+        a_cache = {k: cache[k] for k in ("k", "v", "pos_ids")} \
+            if cache else None
+        mix_a, kv_cache = layers.attention_block(
+            p["mixer"]["attn"], h, cfg, kind="hymba", mode=mode,
+            cache=a_cache, pos=pos, mesh=mesh, mesh_axes=mesh_axes)
+        mix_s, s_state = ssm.mamba_mixer(
+            p["mixer"]["ssm"], h, cfg, mode=mode,
+            state=cache.get("ssm") if cache else None)
+        mix = 0.5 * (mix_a + mix_s)
+        if kv_cache:
+            new_cache.update(kv_cache)
+        if s_state:
+            new_cache["ssm"] = s_state
+    elif kind == "mamba":
+        mix, s_state = ssm.mamba_mixer(p["mixer"], h, cfg, mode=mode,
+                                       state=cache.get("ssm") if cache
+                                       else None)
+        if s_state:
+            new_cache["ssm"] = s_state
+    elif kind == "mlstm":
+        st = {k: cache[k] for k in ("C", "n", "m")} if cache else None
+        mix, st2 = ssm.mlstm_mixer(p["mixer"], h, cfg, mode=mode, state=st)
+        if st2:
+            new_cache.update(st2)
+    elif kind == "slstm":
+        st = {k: cache[k] for k in ("h", "c", "n", "m")} if cache else None
+        mix, st2 = ssm.slstm_mixer(p["mixer"], h, cfg, mode=mode, state=st)
+        if st2:
+            new_cache.update(st2)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+
+    if cfg.cross_attn and kind != "enc":
+        hx = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if mode == "decode":
+            ek, ev = cache["cross_k"], cache["cross_v"]
+        else:
+            B, Se, D = enc_out.shape
+            ek = (enc_out @ p["cross"]["wk"]).reshape(
+                B, Se, cfg.n_heads, cfg.head_dim)
+            ev = (enc_out @ p["cross"]["wv"]).reshape(
+                B, Se, cfg.n_heads, cfg.head_dim)
+        x = x + layers.cross_attention(p["cross"], hx, ek, ev, cfg)
+        if mode == "prefill":
+            new_cache["cross_k"], new_cache["cross_v"] = ek, ev
+        elif mode == "decode":
+            new_cache["cross_k"], new_cache["cross_v"] = \
+                cache["cross_k"], cache["cross_v"]
+
+    if "ffn" in p:
+        h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.is_moe and kind != "enc":
+            f, aux_moe, _ = moe.moe_block(p["ffn"], h2, cfg, mesh, mesh_axes)
+            aux = aux + aux_moe
+        else:
+            f = layers.mlp(p["ffn"], h2, cfg.act)
+        x = x + f
+    return x, new_cache, aux
+
+
+def _scan_blocks(cfg, params_layers, x, *, mode, caches, pos, enc_out,
+                 mesh, mesh_axes, is_encoder=False):
+    """Scan over periods; returns (x, new_caches, aux)."""
+    pattern = ("enc",) * 1 if is_encoder else cfg.block_pattern
+    if is_encoder:
+        params_layers = (params_layers,)
+
+    def body(carry, xs):
+        x, aux = carry
+        x = constrain_acts(x, mesh, mesh_axes)
+        ps, cs = xs
+        new_cs = []
+        for i, kind in enumerate(pattern):
+            x, nc, a = _apply_block(
+                cfg, kind, ps[i], x, mode=mode,
+                cache=cs[i] if cs is not None else None, pos=pos,
+                enc_out=enc_out, mesh=mesh, mesh_axes=mesh_axes)
+            new_cs.append(nc if nc else cs[i] if cs is not None else {})
+            aux = aux + a
+        return (x, aux), tuple(new_cs)
+
+    if mode == "train" and cfg.remat != "nothing":
+        policy = None
+        if cfg.remat == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    n = cfg.enc_layers if is_encoder else cfg.n_periods
+    xs = (params_layers, caches if caches is not None
+          else tuple({} for _ in pattern))
+    if caches is None:
+        xs = (params_layers, None)
+
+    if cfg.scan_layers:
+        aux0 = jnp.zeros((), jnp.float32)
+        if caches is None:
+            (x, aux), _ = jax.lax.scan(
+                lambda c, ps: (body(c, (ps, None))[0], None),
+                (x, aux0), params_layers)
+            new_caches = None
+        else:
+            (x, aux), new_caches = jax.lax.scan(
+                body, (x, aux0), (params_layers, caches))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        ncs = []
+        for li in range(n):
+            ps = jax.tree.map(lambda a: a[li], params_layers)
+            cs = jax.tree.map(lambda a: a[li], caches) \
+                if caches is not None else None
+            (x, aux), nc = body((x, aux), (ps, cs))
+            ncs.append(nc)
+        new_caches = jax.tree.map(lambda *a: jnp.stack(a), *ncs) \
+            if caches is not None else None
+    return x, new_caches, aux
+
+
+def encode(cfg, params, frames, mesh=None, mesh_axes=("data", "model")):
+    """Whisper encoder over stubbed frame embeddings (B, enc_seq, D)."""
+    x = frames.astype(cdtype(cfg))
+    x = x + layers.sinusoidal_pos(x.shape[1], cfg.d_model, x.dtype)[None]
+    x, _, _ = _scan_blocks(cfg, params["enc"]["layers"], x, mode="train",
+                           caches=None, pos=0, enc_out=None, mesh=mesh,
+                           mesh_axes=mesh_axes, is_encoder=True)
+    return layers.rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, mode="train", cache=None,
+            pos=0, frames=None, mesh=None, mesh_axes=("data", "model"),
+            skip_head=False):
+    """tokens (B, S) int32.  Returns (logits, new_cache, aux); with
+    skip_head=True returns the final hidden states instead of logits (the
+    chunked-xent path applies the head itself)."""
+    dt = cdtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = constrain_acts(x, mesh, mesh_axes)
+    if cfg.family in ("audio",) or cfg.name.startswith("gemma"):
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.pos == "learned":
+        S = tokens.shape[1]
+        if mode == "decode":
+            ptab = jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0)
+        else:
+            ptab = params["dec_pos"][:S]
+        x = x + ptab[None].astype(dt)
+
+    enc_out = None
+    if cfg.is_enc_dec and mode != "decode":
+        enc_out = encode(cfg, params, frames, mesh, mesh_axes)
+
+    x, new_cache, aux = _scan_blocks(
+        cfg, params["layers"], x, mode=mode, caches=cache, pos=pos,
+        enc_out=enc_out, mesh=mesh, mesh_axes=mesh_axes)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if skip_head:
+        return x, new_cache, aux
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(dt)
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return logits, new_cache, aux
+
+
+def lm_loss_chunked(cfg, x, head, labels, aux, aux_coef=0.01, z_coef=1e-4,
+                    final_softcap=0.0):
+    """Fused chunked cross-entropy: the (B, S, V) logits tensor is never
+    fully materialized — each S-chunk does one (B,c,D)@(D,V) matmul and
+    immediately reduces to (B,c) statistics.  Cuts the xent HBM traffic by
+    ~the number of elementwise passes XLA makes over full logits (~10×) and
+    the peak activation by S/c.  Python loop (not scan) so probe modules
+    count every chunk."""
+    B, S, D = x.shape
+    n = max(1, cfg.xent_chunk)
+    c = -(-S // n)
+    mask_all = (labels >= 0)
+    nll_sum = 0.0
+    z_sum = 0.0
+    for i in range(n):
+        xs = x[:, i * c:(i + 1) * c]
+        lb = labels[:, i * c:i * c + xs.shape[1]]
+        lg = xs @ head
+        lg = layers.softcap(lg, final_softcap)
+        m = jnp.max(lg, axis=-1).astype(jnp.float32)
+        ex = jnp.exp(lg.astype(jnp.float32) - m[..., None])
+        lse = jnp.log(jnp.sum(ex, axis=-1)) + m
+        onehot = (jnp.arange(lg.shape[-1])[None, None, :]
+                  == jnp.maximum(lb, 0)[..., None])
+        gold = jnp.sum(jnp.where(onehot, lg.astype(jnp.float32), 0.0), -1)
+        msk = (lb >= 0).astype(jnp.float32)
+        nll_sum = nll_sum + ((lse - gold) * msk).sum()
+        z_sum = z_sum + ((lse * msk) ** 2).sum()
+    denom = jnp.maximum(mask_all.sum().astype(jnp.float32), 1.0)
+    loss = nll_sum / denom
+    zloss = z_coef * z_sum / denom
+    return loss + zloss + aux_coef * aux, {"nll": loss, "aux": aux}
+
+
+def lm_loss(cfg, logits, labels, aux, aux_coef=0.01, z_coef=1e-4):
+    """Masked token cross-entropy (labels < 0 are padding).
+
+    The gold logit is extracted with a masked reduction over the vocab dim
+    rather than take_along_axis: the vocab dim is "model"-sharded and a
+    gather across it would make SPMD all-gather the (B,S,V) logits; the
+    (iota == label) reduce stays local with only a (B,S)-sized all-reduce.
+    Keeps logits in bf16 until the reductions (f32 accumulation inside)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    lbl = jnp.maximum(labels, 0)
+    V = logits.shape[-1]
+    m = jnp.max(logits, axis=-1).astype(jnp.float32)
+    ex = jnp.exp(logits.astype(jnp.float32) - m[..., None])
+    lse = jnp.log(jnp.sum(ex, axis=-1)) + m
+    onehot = (jnp.arange(V)[None, None, :] == lbl[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits.astype(jnp.float32), 0.0),
+                   axis=-1)
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    zloss = z_coef * ((lse * mask) ** 2).sum() / denom
+    return loss + zloss + aux_coef * aux, {"nll": loss, "aux": aux}

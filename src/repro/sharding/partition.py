@@ -1,0 +1,112 @@
+"""Logical-axis sharding rule engine.
+
+Parameters/caches carry *logical* axis names per dim (see
+``models/transformer.py``); this module resolves them against a mesh into
+``PartitionSpec``s with two safety rails:
+
+  * divisibility fallback — a dim whose size is not divisible by the mesh
+    axes assigned to it is replicated instead (small KV projections, odd
+    head counts, B=1 decode batches all degrade gracefully);
+  * single-use rail — one mesh axis may shard at most one dim of a given
+    array; later dims fall back to replication.
+
+Default rules (TP over "model", FSDP over the batch axes, DP over
+pod×data):
+
+  vocab/heads/ff/expert/ssm -> model        (tensor/expert parallelism)
+  embed                     -> pod,data     (FSDP: params gathered per layer)
+  batch                     -> pod,data     (data parallelism)
+  kv_seq                    -> model        (decode KV cache sequence dim)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def default_rules(mesh: Mesh, *, fsdp: bool = True) -> Dict[str, Any]:
+    bax = batch_axes(mesh)
+    return {
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv": None,                  # kv_dim: covered by embed-FSDP instead
+        "kv_heads": None,
+        "ff": ("model",),
+        "expert": ("model",),
+        "e_ff": None,                # expert hidden: see serve_rules
+        "ssm": ("model",),
+        "embed": bax if fsdp else None,
+        "batch": bax,
+        "kv_seq": ("model",),
+        "seq": None,
+    }
+
+
+def serve_rules(mesh: Mesh) -> Dict[str, Any]:
+    """Weights-stationary decode sharding: no FSDP over the contraction dim
+    (which would all-gather every weight once per generated token) — instead
+    experts get a second fixed shard dim (e_ff over the batch axes) so the
+    full parameter set still spreads across ALL chips while only KB-sized
+    activations move per step."""
+    r = default_rules(mesh, fsdp=False)
+    r["e_ff"] = batch_axes(mesh)
+    return r
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(logical: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                 mesh: Mesh, rules: Dict[str, Any]) -> P:
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            out.append(None)
+            continue
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes or any(a in used for a in axes) \
+                or dim % _axes_size(mesh, axes) != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_pspecs(specs, shapes, mesh: Mesh, rules=None):
+    """specs: pytree of logical tuples; shapes: matching pytree of
+    array-likes (or ShapeDtypeStructs).  Returns pytree of PartitionSpec."""
+    rules = rules or default_rules(mesh)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(
+        lambda sp, a: resolve_spec(sp, a.shape, mesh, rules),
+        specs, shapes, is_leaf=is_spec)
+
+
+def tree_shardings(specs, shapes, mesh: Mesh, rules=None):
+    ps = tree_pspecs(specs, shapes, mesh, rules)
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), ps,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh, global_batch: Optional[int] = None) -> P:
+    """Batch sharding over (pod, data); falls back to replication when the
+    batch is not divisible (e.g. the B=1 long-context decode shape)."""
+    bax = batch_axes(mesh)
+    if global_batch is not None and global_batch % _axes_size(mesh, bax):
+        return P()
+    return P(bax if len(bax) > 1 else bax[0])

@@ -1,0 +1,174 @@
+"""Distributed train / serve step builders.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function with gradient accumulation over microbatches (lax.scan) and the
+AdamW update; ``make_serve_step`` returns the one-token decode step used by
+the decode_* / long_* dry-run shapes.  Both are built per (cfg, mesh) and
+meant to be wrapped in jax.jit with shardings from ``state_shardings``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import transformer
+from ..models.config import ModelConfig
+from ..sharding import partition
+from . import optim
+
+
+def mesh_axes_of(mesh):
+    return partition.batch_axes(mesh) + ("model",) if mesh is not None \
+        else ("data", "model")
+
+
+# --------------------------------------------------------------------------
+# state
+# --------------------------------------------------------------------------
+
+def init_state(cfg: ModelConfig, key, max_seq: int = 0):
+    params, _ = transformer.make_params(cfg, key, max_seq)
+    return {"params": params, "opt": optim.init_moments(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_shapes_and_specs(cfg: ModelConfig, max_seq: int = 0):
+    """(state_shapes, state_logical_specs) without allocating anything."""
+    pshapes, specs = _params_shapes_specs(cfg, max_seq)
+    state_shapes = {"params": pshapes,
+                    "opt": {"m": jax.tree.map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                        pshapes),
+                        "v": jax.tree.map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                        pshapes)},
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_specs = {"params": specs,
+                   "opt": {"m": specs, "v": specs},
+                   "step": ()}
+    return state_shapes, state_specs
+
+
+@functools.lru_cache(maxsize=64)
+def _params_shapes_specs(cfg: ModelConfig, max_seq: int):
+    """Trace make_params abstractly (no allocation); the logical specs are
+    static python data captured via a side channel during tracing."""
+    box = {}
+
+    def build(k):
+        p, s = transformer.make_params(cfg, k, max_seq)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.key(0))
+    return shapes, box["specs"]
+
+
+def state_shardings(cfg: ModelConfig, mesh, max_seq: int = 0, rules=None):
+    shapes, specs = state_shapes_and_specs(cfg, max_seq)
+    sh = partition.tree_shardings(specs, shapes, mesh, rules)
+    return sh, shapes
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh=None,
+                    opt_cfg: optim.AdamWConfig = optim.AdamWConfig()):
+    axes = mesh_axes_of(mesh)
+
+    def loss_fn(params, tokens, labels, frames):
+        if cfg.xent_chunk:
+            x, _, aux = transformer.forward(
+                cfg, params, tokens, mode="train", frames=frames,
+                mesh=mesh, mesh_axes=axes, skip_head=True)
+            head = params["embed"].T if cfg.tie_embeddings \
+                else params["lm_head"]
+            loss, parts = transformer.lm_loss_chunked(
+                cfg, x, head.astype(x.dtype), labels, aux,
+                final_softcap=cfg.final_softcap)
+        else:
+            logits, _, aux = transformer.forward(
+                cfg, params, tokens, mode="train", frames=frames,
+                mesh=mesh, mesh_axes=axes)
+            loss, parts = transformer.lm_loss(cfg, logits, labels, aux)
+        return loss, parts
+
+    def train_step(state, batch):
+        params = state["params"]
+        mb = cfg.microbatches
+        tokens, labels = batch["tokens"], batch["labels"]
+        frames = batch.get("frames")
+        B = tokens.shape[0]
+        assert B % mb == 0, (B, mb)
+
+        if mb == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tokens, labels, frames)
+        else:
+            has_frames = frames is not None
+            r = lambda x: x.reshape(mb, B // mb, *x.shape[1:])
+
+            def micro(acc, xs):
+                tk, lb = xs[0], xs[1]
+                fr = xs[2] if has_frames else None
+                (l, pts), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, tk, lb, fr)
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), pts
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (r(tokens), r(labels)) + ((r(frames),) if has_frames
+                                           else ())
+            (grads, loss), parts = jax.lax.scan(micro, (zero_g, 0.0), xs)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss / mb
+            parts = jax.tree.map(lambda x: x.mean(), parts)
+
+        new_params, new_opt, stats = optim.adamw_update(
+            opt_cfg, params, grads, state["opt"], state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss, **stats,
+                   **{k: v for k, v in parts.items()}}
+        return new_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+
+def make_prefill(cfg: ModelConfig, mesh=None):
+    axes = mesh_axes_of(mesh)
+
+    def prefill(params, tokens, cache, frames=None):
+        logits, new_cache, _ = transformer.forward(
+            cfg, params, tokens, mode="prefill", cache=cache,
+            frames=frames, mesh=mesh, mesh_axes=axes)
+        return logits[:, -1], new_cache
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None):
+    """One-token decode: (params, cache, token (B,1), pos ()) ->
+    (logits (B, vocab), new_cache)."""
+    axes = mesh_axes_of(mesh)
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache, _ = transformer.forward(
+            cfg, params, token, mode="decode", cache=cache, pos=pos,
+            mesh=mesh, mesh_axes=axes)
+        return logits[:, 0], new_cache
+
+    return serve_step

@@ -1,0 +1,240 @@
+"""Sequential heapq-based DES oracle — the classical implementation of the
+paper's engine, used to validate the vectorized JAX engine event-for-event.
+
+Replicates the engine's semantics exactly (no network mode):
+  * global scheduler assigns every task of a job at arrival, using a
+    load snapshot taken before any of the job's tasks are enqueued
+    (LOAD_BALANCE ties break to the lowest server index, like argmin)
+  * ROUND_ROBIN advances the pointer per task
+  * a task becomes READY when all DAG parents finished (dep_count == 0);
+    READY tasks enqueue at their assigned server and trigger wakeups
+  * servers sleep after τ seconds of idleness (SINGLE/DUAL timer) into
+    cfg.sleep_state; wake latency/power follow the ACPI profile
+  * energy integrates the piecewise-constant power curve exactly
+"""
+from __future__ import annotations
+
+import heapq
+import math
+
+import numpy as np
+
+from repro.core.types import INF, SchedPolicy, SimConfig, SleepPolicy, SrvState
+
+
+class OracleServer:
+    def __init__(self, cfg, i):
+        self.cfg = cfg
+        self.i = i
+        self.cores = [None] * cfg.n_cores     # task id or None
+        self.core_end = [INF] * cfg.n_cores
+        self.queue = []
+        self.state = SrvState.IDLE
+        self.idle_since = 0.0
+        self.wake_at = INF
+        self.tau = INF
+        self.energy = 0.0
+        self.residency = np.zeros(SrvState.NUM)
+        self.busy_core_seconds = 0.0
+        self.wake_count = 0
+
+    def busy(self):
+        return sum(1 for c in self.cores if c is not None)
+
+    def load(self):
+        return self.busy() + len(self.queue)
+
+    def power(self):
+        sp = self.cfg.server_power
+        if self.state in (SrvState.ACTIVE, SrvState.IDLE):
+            b = self.busy()
+            return (sp.p_base + b * sp.p_core_active
+                    + (self.cfg.n_cores - b) * sp.p_core_idle)
+        return {SrvState.PKG_C6: sp.p_pkg_c6, SrvState.S3: sp.p_s3,
+                SrvState.OFF: 0.0, SrvState.WAKING: sp.p_wake}[self.state]
+
+    def accrue(self, dt):
+        self.energy += self.power() * dt
+        self.residency[self.state] += dt
+        self.busy_core_seconds += self.busy() * dt
+
+
+class OracleSim:
+    """Run with the same (cfg, arrivals, specs, tau) as farm.simulate."""
+
+    def __init__(self, cfg: SimConfig, arrivals, specs, tau=None):
+        self.cfg = cfg
+        self.arrivals = np.asarray(arrivals, float)
+        self.specs = specs
+        self.servers = [OracleServer(cfg, i) for i in range(cfg.n_servers)]
+        if tau is not None:
+            tau = np.broadcast_to(np.asarray(tau, float),
+                                  (cfg.n_servers,))
+            for s, tv in zip(self.servers, tau):
+                s.tau = float(tv)
+        self.t = 0.0
+        self.rr = 0
+        self.finish = {}
+        self.job_finish = {}
+        self.events = []
+
+    # ---- helpers ------------------------------------------------------
+    def _wake_latency(self, state):
+        sp = self.cfg.server_power
+        return {SrvState.PKG_C6: sp.t_wake_pkg_c6, SrvState.S3: sp.t_wake_s3,
+                SrvState.OFF: sp.t_wake_off}.get(state, 0.0)
+
+    def _accrue_all(self, t_next):
+        dt = t_next - self.t
+        assert dt >= -1e-9, (t_next, self.t)
+        for s in self.servers:
+            s.accrue(max(dt, 0.0))
+        self.t = t_next
+
+    def _pick(self, load_snapshot):
+        cfg = self.cfg
+        if cfg.sched_policy == SchedPolicy.ROUND_ROBIN:
+            srv = self.rr % cfg.n_servers
+            self.rr = (srv + 1) % cfg.n_servers
+            return srv
+        scores = list(load_snapshot)
+        if cfg.sleep_policy == SleepPolicy.DUAL_TIMER:
+            for i, s in enumerate(self.servers):
+                scores[i] += (1000.0 if getattr(s, "pool", 0) else 0.0)
+        best = min(range(cfg.n_servers), key=lambda i: scores[i])
+        return best
+
+    def _try_start(self, srv):
+        s = self.servers[srv]
+        if s.state not in (SrvState.ACTIVE, SrvState.IDLE):
+            return
+        while s.queue and None in s.cores:
+            c = s.cores.index(None)
+            tid = s.queue.pop(0)
+            dur = self.task_service[tid] / self.cfg.core_freq
+            s.cores[c] = tid
+            s.core_end[c] = self.t + dur
+            heapq.heappush(self.events,
+                           (self.t + dur, 0, "complete", (srv, c)))
+        s.state = SrvState.ACTIVE if s.busy() else SrvState.IDLE
+
+    def _enqueue(self, tid):
+        srv = self.task_server[tid]
+        s = self.servers[srv]
+        s.queue.append(tid)
+        if s.state in (SrvState.PKG_C6, SrvState.S3, SrvState.OFF):
+            lat = self._wake_latency(s.state)
+            s.state = SrvState.WAKING
+            s.wake_at = self.t + lat
+            s.wake_count += 1
+            heapq.heappush(self.events, (s.wake_at, 1, "wake", srv))
+        self._try_start(srv)
+
+    def _idle_edge(self, srv):
+        """Stamp idle_since and schedule the sleep timer."""
+        s = self.servers[srv]
+        if s.state == SrvState.IDLE and s.tau < INF / 2 \
+                and self.cfg.sleep_policy in (SleepPolicy.SINGLE_TIMER,
+                                              SleepPolicy.DUAL_TIMER):
+            heapq.heappush(self.events,
+                           (self.t + s.tau, 2, "timer", (srv, self.t)))
+
+    # ---- main loop ----------------------------------------------------
+    def run(self):
+        cfg = self.cfg
+        T = cfg.tasks_per_job
+        n_jobs = len(self.arrivals)
+        self.task_service = {}
+        self.task_server = {}
+        self.dep_count = {}
+        self.children = {}
+        self.remaining = {}
+
+        for j, t in enumerate(self.arrivals):
+            heapq.heappush(self.events, (float(t), 3, "arrive", j))
+
+        # servers are IDLE since t=0: their first delay timer is armed
+        # immediately (matches the engine's idle_since initialization)
+        for srv in range(cfg.n_servers):
+            self._idle_edge(srv)
+
+        while self.events:
+            t_next, _, kind, payload = heapq.heappop(self.events)
+            self._accrue_all(t_next)
+
+            if kind == "arrive":
+                j = payload
+                spec = self.specs[j]
+                nt = len(spec.service)
+                self.remaining[j] = nt
+                load_snapshot = [s.load() for s in self.servers]
+                dep = {i: 0 for i in range(nt)}
+                kids = {i: [] for i in range(nt)}
+                for (p, c, b) in spec.edges:
+                    dep[c] += 1
+                    kids[p].append(c)
+                for i in range(nt):
+                    tid = j * T + i
+                    self.task_service[tid] = float(spec.service[i])
+                    self.task_server[tid] = self._pick(load_snapshot) \
+                        if cfg.sched_policy == SchedPolicy.ROUND_ROBIN \
+                        else self._pick(load_snapshot)
+                    self.dep_count[tid] = dep[i]
+                    self.children[tid] = [j * T + c for c in kids[i]]
+                for i in range(nt):
+                    tid = j * T + i
+                    if self.dep_count[tid] == 0:
+                        self._enqueue(tid)
+
+            elif kind == "complete":
+                srv, c = payload
+                s = self.servers[srv]
+                if s.core_end[c] > self.t + 1e-12 or s.cores[c] is None:
+                    continue                      # stale event
+                tid = s.cores[c]
+                s.cores[c] = None
+                s.core_end[c] = INF
+                self.finish[tid] = self.t
+                j = tid // T
+                self.remaining[j] -= 1
+                if self.remaining[j] == 0:
+                    self.job_finish[j] = self.t
+                for ch in self.children[tid]:
+                    self.dep_count[ch] -= 1
+                    if self.dep_count[ch] == 0:
+                        self._enqueue(ch)
+                if len(self.job_finish) == n_jobs:
+                    break            # engine stops at the last completion
+                was_active = s.state == SrvState.ACTIVE
+                self._try_start(srv)
+                if s.state == SrvState.IDLE and was_active:
+                    s.idle_since = self.t
+                    self._idle_edge(srv)
+
+            elif kind == "wake":
+                srv = payload
+                s = self.servers[srv]
+                if s.state == SrvState.WAKING and s.wake_at <= self.t + 1e-12:
+                    s.state = SrvState.IDLE
+                    s.wake_at = INF
+                    s.idle_since = self.t
+                    self._try_start(srv)
+                    if s.state == SrvState.IDLE:
+                        self._idle_edge(srv)
+
+            elif kind == "timer":
+                srv, stamp = payload
+                s = self.servers[srv]
+                if s.state == SrvState.IDLE and \
+                        abs(s.idle_since - stamp) < 1e-12:
+                    s.state = cfg.sleep_state
+
+        return self
+
+    # ---- results ------------------------------------------------------
+    def latencies(self):
+        return np.asarray([self.job_finish[j] - self.arrivals[j]
+                           for j in sorted(self.job_finish)])
+
+    def total_energy(self):
+        return sum(s.energy for s in self.servers)

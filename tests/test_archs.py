@@ -1,0 +1,150 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+same-family config and runs one forward + one train step + one decode step
+on CPU, asserting output shapes and finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.train import optim, step as step_lib
+
+ARCHS = configs.list_archs()
+
+
+def _inputs(cfg, B=2, S=16):
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    frames = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16) \
+        if cfg.is_enc_dec else None
+    return tokens, frames
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_is_exact(arch):
+    """The full-scale config matches the assignment sheet."""
+    cfg = configs.get_config(arch)
+    sheet = {
+        "qwen3_moe_235b_a22b": (94, 4096, 64, 4, 151936),
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 163840),
+        "qwen1_5_4b": (40, 2560, 20, 20, 151936),
+        "smollm_360m": (32, 960, 15, 5, 49152),
+        "gemma2_9b": (42, 3584, 16, 8, 256000),
+        "llama3_2_1b": (16, 2048, 32, 8, 128256),
+        "hymba_1_5b": (32, 1600, 25, 5, 32001),
+        "xlstm_350m": (24, 1024, 4, 4, 50304),
+        "chameleon_34b": (48, 8192, 64, 8, 65536),
+        "whisper_large_v3": (32, 1280, 20, 20, 51866),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.vocab) == sheet
+    if arch == "qwen3_moe_235b_a22b":
+        assert (cfg.n_experts, cfg.top_k, cfg.d_expert) == (128, 8, 1536)
+    if arch == "moonshot_v1_16b_a3b":
+        assert (cfg.n_experts, cfg.top_k, cfg.d_expert) == (64, 6, 1408)
+    if arch == "hymba_1_5b":
+        assert cfg.ssm_state == 16
+    if arch == "gemma2_9b":
+        assert cfg.block_pattern == ("swa", "attn")
+    if arch == "whisper_large_v3":
+        assert cfg.enc_layers == 32 and cfg.cross_attn
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = configs.get_smoke(arch)
+    B, S = 2, 16
+    max_seq = 32 if cfg.pos == "learned" else 0
+    params, specs = transformer.make_params(cfg, jax.random.key(0), max_seq)
+    tokens, frames = _inputs(cfg, B, S)
+    logits, _, aux = transformer.forward(cfg, params, tokens, mode="train",
+                                         frames=frames)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.float32(logits)).all()
+    assert np.isfinite(float(aux))
+    # specs mirror params structurally
+    jax.tree.map(lambda p, s: None, params, specs,
+                 is_leaf=lambda x: isinstance(x, tuple) and not
+                 isinstance(x, dict))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = dataclasses.replace(configs.get_smoke(arch), microbatches=2)
+    B, S = 4, 16
+    max_seq = 32 if cfg.pos == "learned" else 0
+    state = step_lib.init_state(cfg, jax.random.key(0), max_seq)
+    opt_cfg = optim.AdamWConfig(warmup_steps=0)      # lr>0 from step 0
+    ts = jax.jit(step_lib.make_train_step(cfg, opt_cfg=opt_cfg))
+    tokens, frames = _inputs(cfg, B, S)
+    batch = {"tokens": tokens, "labels": tokens}
+    if frames is not None:
+        batch["frames"] = frames
+    state2, m = ts(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(state2["step"]) == 1
+    # parameters actually moved
+    d = jax.tree.map(lambda a, b: float(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        state["params"], state2["params"])
+    assert max(jax.tree.leaves(d)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    B, S = 2, 8
+    max_seq = S + 8 if cfg.pos == "learned" else 0
+    params, _ = transformer.make_params(cfg, jax.random.key(0), max_seq)
+    cache, _ = transformer.init_cache(cfg, B, S + 8)
+    ss = jax.jit(step_lib.make_serve_step(cfg))
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache = ss(params, cache, tok, 0)
+    logits, cache = ss(params, cache, tok, 1)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.float32(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "gemma2_9b", "hymba_1_5b",
+                                  "xlstm_350m", "whisper_large_v3",
+                                  "chameleon_34b", "smollm_360m",
+                                  "qwen1_5_4b"])
+def test_decode_matches_train_logits(arch):
+    """prefill(S) + decode(S..S+2) == train forward at those positions."""
+    cfg = configs.get_smoke(arch)
+    B, S, extra = 2, 12, 3
+    max_seq = S + extra if cfg.pos == "learned" else 0
+    params, _ = transformer.make_params(cfg, jax.random.key(0), max_seq)
+    tokens, frames = _inputs(cfg, B, S + extra)
+    cache, _ = transformer.init_cache(cfg, B, S + extra)
+    _, cache, _ = transformer.forward(cfg, params, tokens[:, :S],
+                                      mode="prefill", cache=cache,
+                                      frames=frames)
+    for t in range(S, S + extra):
+        dec, cache, _ = transformer.forward(cfg, params, tokens[:, t:t + 1],
+                                            mode="decode", cache=cache,
+                                            pos=t)
+        full, _, _ = transformer.forward(cfg, params, tokens[:, :t + 1],
+                                         mode="train", frames=frames)
+        np.testing.assert_allclose(np.float32(dec[:, 0]),
+                                   np.float32(full[:, t]),
+                                   atol=5e-2, rtol=5e-2)
+
+
+def test_param_counts_are_plausible():
+    """Full configs land near their nameplate sizes (±30%)."""
+    # moonshot: the ASSIGNED dims (48L × 64e × d_exp 1408) give ~29B total;
+    # the hf nameplate "16B" corresponds to the real model's 27 layers.
+    # We implement the assigned config verbatim.
+    expect = {"qwen3_moe_235b_a22b": 235e9, "moonshot_v1_16b_a3b": 29e9,
+              "qwen1_5_4b": 4e9, "smollm_360m": 360e6, "gemma2_9b": 9e9,
+              "llama3_2_1b": 1.2e9, "hymba_1_5b": 1.5e9,
+              "chameleon_34b": 34e9}
+    for arch, n in expect.items():
+        got = configs.get_config(arch).param_count()
+        assert 0.7 * n < got < 1.4 * n, (arch, got, n)
+    # MoE active counts
+    q3 = configs.get_config("qwen3_moe_235b_a22b")
+    assert q3.param_count(active_only=True) < 0.15 * q3.param_count()

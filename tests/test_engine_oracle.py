@@ -1,0 +1,107 @@
+"""Event-for-event validation of the vectorized engine against the
+sequential heapq oracle (DESIGN.md §3: semantics preserved exactly)."""
+import numpy as np
+import pytest
+
+from repro.core import farm as farm_mod
+from repro.core import workload
+from repro.core.jobs import dag_chain, dag_fanout, dag_single
+from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
+                              SrvState)
+
+from oracle import OracleSim
+
+
+def _run_both(cfg, arr, specs, tau=None):
+    res = farm_mod.simulate(cfg, arr, specs, tau=tau)
+    orc = OracleSim(cfg, arr, specs, tau=tau).run()
+    return res, orc
+
+
+def _compare(res, orc, n_jobs, energy_rtol=2e-3):
+    lat_o = orc.latencies()
+    assert res.n_finished == n_jobs
+    assert len(lat_o) == n_jobs
+    np.testing.assert_allclose(np.sort(res.latencies), np.sort(lat_o),
+                               rtol=1e-4, atol=1e-4)
+    assert res.server_energy == pytest.approx(orc.total_energy(),
+                                              rel=energy_rtol)
+
+
+@pytest.mark.parametrize("policy,tau,sleep_state", [
+    (SleepPolicy.ALWAYS_ON, None, SrvState.S3),
+    (SleepPolicy.SINGLE_TIMER, 0.05, SrvState.S3),
+    (SleepPolicy.SINGLE_TIMER, 0.02, SrvState.PKG_C6),
+])
+def test_single_task_jobs_match_oracle(policy, tau, sleep_state):
+    n_jobs = 200
+    cfg = SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
+                    sched_policy=SchedPolicy.LOAD_BALANCE,
+                    sleep_policy=policy, sleep_state=sleep_state,
+                    max_events=50_000)
+    rng = np.random.default_rng(7)
+    arr = workload.poisson_arrivals(120.0, n_jobs, seed=3)
+    specs = [dag_single(rng.exponential(0.02)) for _ in range(n_jobs)]
+    res, orc = _run_both(cfg, arr, specs, tau=tau)
+    _compare(res, orc, n_jobs)
+    wakes = np.asarray([s.wake_count for s in orc.servers])
+    np.testing.assert_array_equal(res.wake_count, wakes)
+
+
+def test_round_robin_matches_oracle():
+    n_jobs = 150
+    cfg = SimConfig(n_servers=5, n_cores=1, max_jobs=256, tasks_per_job=1,
+                    sched_policy=SchedPolicy.ROUND_ROBIN,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=50_000)
+    rng = np.random.default_rng(11)
+    arr = workload.poisson_arrivals(60.0, n_jobs, seed=5)
+    specs = [dag_single(rng.exponential(0.03)) for _ in range(n_jobs)]
+    res, orc = _run_both(cfg, arr, specs)
+    _compare(res, orc, n_jobs)
+
+
+def test_dag_chain_matches_oracle():
+    n_jobs = 80
+    cfg = SimConfig(n_servers=4, n_cores=2, max_jobs=128, tasks_per_job=3,
+                    sched_policy=SchedPolicy.LOAD_BALANCE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=50_000)
+    rng = np.random.default_rng(13)
+    arr = workload.poisson_arrivals(40.0, n_jobs, seed=6)
+    specs = [dag_chain(rng.exponential(0.01, size=3)) for _ in range(n_jobs)]
+    res, orc = _run_both(cfg, arr, specs)
+    _compare(res, orc, n_jobs)
+
+
+def test_dag_fanout_matches_oracle():
+    n_jobs = 60
+    cfg = SimConfig(n_servers=4, n_cores=2, max_jobs=64, tasks_per_job=4,
+                    sched_policy=SchedPolicy.LOAD_BALANCE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=50_000)
+    rng = np.random.default_rng(17)
+    arr = workload.poisson_arrivals(30.0, n_jobs, seed=8)
+    specs = [dag_fanout(rng.exponential(0.005),
+                        rng.exponential(0.01, size=2),
+                        rng.exponential(0.005)) for _ in range(n_jobs)]
+    res, orc = _run_both(cfg, arr, specs)
+    _compare(res, orc, n_jobs)
+
+
+def test_dual_timer_pools_match_oracle():
+    n_jobs = 150
+    N = 6
+    cfg = SimConfig(n_servers=N, n_cores=2, max_jobs=256, tasks_per_job=1,
+                    sched_policy=SchedPolicy.LOAD_BALANCE,
+                    sleep_policy=SleepPolicy.DUAL_TIMER,
+                    sleep_state=SrvState.S3, max_events=50_000)
+    rng = np.random.default_rng(23)
+    arr = workload.poisson_arrivals(80.0, n_jobs, seed=9)
+    specs = [dag_single(rng.exponential(0.02)) for _ in range(n_jobs)]
+    tau = np.where(np.arange(N) < N // 2, 1.0, 0.01)   # high-τ pool first
+    pools = (np.arange(N) >= N // 2).astype(np.int32)
+
+    res = farm_mod.simulate(cfg, arr, specs, tau=tau, pools=pools)
+    orc = OracleSim(cfg, arr, specs, tau=tau)
+    for s, p in zip(orc.servers, pools):
+        s.pool = int(p)
+    orc.run()
+    _compare(res, orc, n_jobs)

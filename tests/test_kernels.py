@@ -1,0 +1,111 @@
+"""Per-kernel allclose validation against the pure-jnp oracles in
+kernels/ref.py, swept over shapes/dtypes (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+from repro.kernels.dcsim_step import dcsim_advance, INF
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,Sq,Skv,hd,causal,window,cap", [
+    (2, 4, 2, 256, 256, 64, True, 0, 0.0),
+    (1, 4, 4, 128, 128, 128, True, 0, 50.0),     # softcap (gemma2)
+    (2, 2, 1, 256, 256, 64, True, 64, 0.0),      # sliding window
+    (1, 8, 2, 384, 384, 64, True, 0, 0.0),       # non-multiple of block
+    (1, 2, 2, 128, 256, 32, False, 0, 0.0),      # cross attention
+])
+def test_flash_attention_matches_ref(B, H, KV, Sq, Skv, hd, causal, window,
+                                     cap, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, Skv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, Skv, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          interpret=True)
+    exp = ref.mha_reference(q, k, v, causal=causal, window=window,
+                            softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.float32(out), np.float32(exp), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_matches_model_attend():
+    """The kernel and the model's streaming attend agree (same oracle)."""
+    from repro.models.layers import attend
+    ks = jax.random.split(jax.random.key(1), 3)
+    B, H, KV, S, hd = 2, 4, 2, 192, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    a = attend(q, k, v, causal=True, chunk=64)
+    f = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True,
+                        interpret=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.float32(a), np.float32(f), atol=2e-5,
+                               rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# ssm scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,Dss,N,block_d,chunk_t", [
+    (2, 64, 256, 16, 128, 16),
+    (1, 128, 512, 8, 256, 32),
+    (3, 32, 128, 16, 128, 8),
+])
+def test_ssm_scan_matches_ref(B, S, Dss, N, block_d, chunk_t, dtype):
+    ks = jax.random.split(jax.random.key(2), 4)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, Dss))) * 0.1
+    Bm = jax.random.normal(ks[1], (B, S, N))
+    Cm = jax.random.normal(ks[2], (B, S, N))
+    x = jax.random.normal(ks[3], (B, S, Dss))
+    A = -jnp.exp(jax.random.normal(jax.random.key(5), (Dss, N)) * 0.3)
+    dt, Bm, Cm, x = (a.astype(dtype) for a in (dt, Bm, Cm, x))
+    y = ssm_scan(dt, Bm, Cm, x, A, block_d=block_d, chunk_t=chunk_t,
+                 interpret=True)
+    y_ref, _ = ref.ssm_scan_reference(dt, Bm, Cm, x, A)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.float32(y), np.float32(y_ref), atol=tol,
+                               rtol=tol)
+
+
+# --------------------------------------------------------------------------
+# dcsim advance
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 300), c=st.integers(1, 4), seed=st.integers(0, 999))
+def test_dcsim_advance_matches_ref(n, c, seed):
+    rng = np.random.default_rng(seed)
+    t = np.float32(rng.uniform(0, 10))
+    t_next = np.float32(t + rng.uniform(0, 1))
+    busy = np.where(rng.random((n, c)) < 0.5,
+                    rng.uniform(t, t + 2, (n, c)).astype(np.float32),
+                    np.float32(INF))
+    state = rng.integers(0, 6, n).astype(np.int32)
+    energy = rng.uniform(0, 100, n).astype(np.float32)
+    bsec = rng.uniform(0, 10, n).astype(np.float32)
+    ptab = jnp.asarray([65.0, 65.0, 15.0, 9.0, 0.0, 145.0], jnp.float32)
+
+    got = dcsim_advance(jnp.asarray(busy), jnp.asarray(state),
+                        jnp.asarray(energy), jnp.asarray(bsec),
+                        t, t_next, ptab, 13.0, 2.0, interpret=True)
+    exp = ref.dcsim_advance_reference(
+        jnp.asarray(busy), jnp.asarray(state), jnp.asarray(energy),
+        jnp.asarray(bsec), jnp.asarray(t), jnp.asarray(t_next), ptab,
+        13.0, 2.0)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.float32(g), np.float32(e),
+                                   rtol=1e-5, atol=1e-5)

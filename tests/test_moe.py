@@ -1,0 +1,92 @@
+"""MoE layer: scatter production path vs one-hot einsum oracle, capacity
+semantics, and routing invariants (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import moe, transformer
+
+
+def _cfg(**kw):
+    base = configs.get_smoke("qwen3_moe_235b_a22b")
+    return dataclasses.replace(base, **kw)
+
+
+@pytest.mark.parametrize("B,S,E,k,cf", [
+    (2, 16, 8, 2, 1.25),
+    (1, 32, 4, 1, 1.0),
+    (3, 8, 8, 4, 2.0),
+    (2, 1, 8, 2, 1.25),          # decode shape
+])
+def test_scatter_matches_einsum(B, S, E, k, cf):
+    cfg = _cfg(n_experts=E, top_k=k, capacity_factor=cf)
+    p, _ = transformer._moe_params(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    a, aux_a, drop_a = moe.moe_scatter(p, x, cfg)
+    b, aux_b, drop_b = moe.moe_einsum(p, x, cfg)
+    np.testing.assert_allclose(np.float32(a), np.float32(b), atol=2e-2,
+                               rtol=2e-2)
+    assert int(drop_a) == int(drop_b)
+    assert float(aux_a) == pytest.approx(float(aux_b), rel=1e-5)
+
+
+def test_high_capacity_is_dropless():
+    cfg = _cfg(capacity_factor=8.0)
+    p, _ = transformer._moe_params(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model))
+    _, _, dropped = moe.moe_scatter(p, x, cfg)
+    assert int(dropped) == 0
+
+
+def test_capacity_drops_monotone():
+    cfg_lo = _cfg(capacity_factor=0.5)
+    cfg_hi = _cfg(capacity_factor=1.5)
+    p, _ = transformer._moe_params(cfg_lo, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 64, cfg_lo.d_model))
+    _, _, d_lo = moe.moe_scatter(p, x, cfg_lo)
+    _, _, d_hi = moe.moe_scatter(p, x, cfg_hi)
+    assert int(d_lo) > int(d_hi)
+
+
+def test_shared_experts_add_dense_path():
+    cfg = _cfg(n_shared_experts=1)
+    p, _ = transformer._moe_params(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    out_with, _, _ = moe.moe_scatter(p, x, cfg)
+    p2 = {k: v for k, v in p.items() if k != "shared"}
+    cfg2 = _cfg(n_shared_experts=0)
+    out_wo, _, _ = moe.moe_scatter(p2, x, cfg2)
+    assert np.abs(np.float32(out_with) - np.float32(out_wo)).max() > 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99), S=st.integers(1, 24))
+def test_positions_in_expert_are_unique_per_expert(seed, S):
+    cfg = _cfg()
+    topi = jax.random.randint(jax.random.key(seed), (2, S, cfg.top_k), 0,
+                              cfg.n_experts)
+    pos = moe._positions_in_expert(topi, cfg)
+    t = np.asarray(topi).reshape(2, -1)
+    q = np.asarray(pos).reshape(2, -1)
+    for b in range(2):
+        for e in range(cfg.n_experts):
+            sel = q[b][t[b] == e]
+            assert len(np.unique(sel)) == len(sel)          # no collisions
+            if len(sel):
+                assert set(sel) == set(range(len(sel)))     # dense 0..n-1
+
+
+def test_router_gates_normalized():
+    cfg = _cfg()
+    p, _ = transformer._moe_params(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    topi, gates, aux = moe.route(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(topi) < cfg.n_experts).all()

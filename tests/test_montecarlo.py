@@ -1,0 +1,101 @@
+"""Replica-parallel Monte-Carlo sweeps: the vmapped batch must agree with
+individual runs, and the fault-model helpers must be sane."""
+import numpy as np
+import pytest
+
+from repro.core import engine, farm as farm_mod, montecarlo, workload
+from repro.core.jobs import dag_single
+from repro.core.types import SimConfig, SleepPolicy
+
+
+def _cfg():
+    return SimConfig(n_servers=4, n_cores=2, local_q=64, max_jobs=128,
+                     tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON,
+                     max_events=10_000)
+
+
+def test_vmapped_replicas_match_individual_runs():
+    cfg = _cfg()
+    n_jobs, R = 80, 3
+    rng = np.random.default_rng(0)
+    specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+    arrs = np.stack([workload.poisson_arrivals(150.0, n_jobs, seed=s)
+                     for s in range(R)])
+
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs)
+    out = montecarlo.run_replicas(cfg, state_b, tc)
+    stats = montecarlo.replica_stats(out, cfg)
+
+    for r in range(R):
+        solo = farm_mod.simulate(cfg, arrs[r], specs)
+        assert stats["finished"][r] == solo.n_finished == n_jobs
+        assert stats["mean_latency"][r] == pytest.approx(
+            solo.mean_latency, rel=1e-4)
+        assert stats["energy"][r] == pytest.approx(solo.server_energy,
+                                                   rel=1e-3)
+
+
+def test_tau_sweep_via_replicas():
+    """A τ sweep as a replica batch (the Fig-5 pattern, one vmap)."""
+    cfg = SimConfig(n_servers=4, n_cores=2, local_q=64, max_jobs=128,
+                    tasks_per_job=1,
+                    sleep_policy=SleepPolicy.SINGLE_TIMER,
+                    max_events=10_000)
+    n_jobs, taus = 60, np.asarray([0.01, 0.1, 1.0])
+    rng = np.random.default_rng(1)
+    specs = [dag_single(rng.exponential(0.02)) for _ in range(n_jobs)]
+    arrs = np.stack([workload.poisson_arrivals(30.0, n_jobs, seed=7)] * 3)
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs, taus=taus)
+    out = montecarlo.run_replicas(cfg, state_b, tc)
+    stats = montecarlo.replica_stats(out, cfg)
+    assert (stats["finished"] == n_jobs).all()
+    assert len(set(np.round(stats["energy"], 3))) > 1   # τ actually matters
+
+
+def test_failure_model_and_young_daly():
+    fails = montecarlo.poisson_failure_times(mtbf=1000.0, horizon=500.0,
+                                             n_nodes=100, seed=0)
+    # rate = 0.1/s over 500s -> ~50 failures
+    assert 20 < len(fails) < 100
+    assert (np.diff(fails) > 0).all()
+    assert montecarlo.young_daly_interval(3600.0, 50.0) == pytest.approx(
+        600.0)
+
+
+@pytest.mark.slow
+def test_replicas_shard_map_over_devices():
+    """Replica batch distributed over an 8-device mesh (subprocess) matches
+    the single-device vmap — the axis that scales sweeps to 512 chips."""
+    import os
+    import subprocess
+    import sys
+    script = r"""
+import sys; sys.path.insert(0, "src")
+import jax, numpy as np
+from repro.core import montecarlo, workload
+from repro.core.jobs import dag_single
+from repro.core.types import SimConfig, SleepPolicy
+cfg = SimConfig(n_servers=4, n_cores=2, local_q=64, max_jobs=128,
+                tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON,
+                max_events=8000)
+n_jobs, R = 60, 8
+rng = np.random.default_rng(0)
+specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+arrs = np.stack([workload.poisson_arrivals(120.0, n_jobs, seed=s)
+                 for s in range(R)])
+state_b, tc = montecarlo.batched_state(cfg, arrs, specs)
+mesh = jax.make_mesh((8,), ("replicas",))
+out = montecarlo.run_replicas(cfg, state_b, tc, mesh=mesh)
+ref = montecarlo.run_replicas(cfg, state_b, tc)
+s1 = montecarlo.replica_stats(out, cfg)
+s2 = montecarlo.replica_stats(ref, cfg)
+assert (s1["finished"] == n_jobs).all()
+assert np.allclose(s1["mean_latency"], s2["mean_latency"], rtol=1e-5)
+print("REPLICAS-MATCH")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, cwd="/root/repo",
+                       timeout=420)
+    assert "REPLICAS-MATCH" in r.stdout, r.stdout + r.stderr
