@@ -17,14 +17,15 @@ import numpy as np
 from .common import row
 from repro.core import engine, farm as farm_mod, montecarlo, workload
 from repro.core.jobs import dag_single
-from repro.core.types import SimConfig, SleepPolicy
+from repro.core.types import SimConfig, SleepPolicy, TelemetryConfig
 
 
-def one_farm(n_servers, n_jobs=1000, seed=0):
+def one_farm(n_servers, n_jobs=1000, seed=0, telemetry=True):
     cfg = SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
                     max_jobs=max(n_jobs, 16), tasks_per_job=1,
                     sleep_policy=SleepPolicy.ALWAYS_ON,
-                    max_events=20_000)
+                    max_events=20_000,
+                    telemetry=TelemetryConfig(enabled=telemetry))
     rng = np.random.default_rng(seed)
     lam = workload.utilization_to_rate(0.5, 0.01, n_servers, 4)
     arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
@@ -33,6 +34,24 @@ def one_farm(n_servers, n_jobs=1000, seed=0):
     res = farm_mod.simulate(cfg, arr, specs)
     dt = time.time() - t0
     return res.events / dt, res
+
+
+def telemetry_overhead(n_servers=512, n_jobs=600, repeats=2):
+    """Wall-clock cost of the instrumented step: events/s with telemetry
+    off vs on (best of ``repeats``, post-jit).  Tracked in the perf
+    trajectory; the acceptance budget is <15% overhead."""
+    eps = {}
+    for mode in (False, True):
+        best = 0.0
+        for r in range(repeats + 1):    # first rep includes jit compile
+            # same seed every rep: repeats re-time the identical jitted
+            # computation rather than different workload instances
+            e, _ = one_farm(n_servers, n_jobs=n_jobs, seed=0,
+                            telemetry=mode)
+            best = max(best, e)
+        eps[mode] = best
+    return {"events_per_s_off": eps[False], "events_per_s_on": eps[True],
+            "overhead_frac": eps[False] / max(eps[True], 1e-9) - 1.0}
 
 
 def replica_throughput(n_replicas=8, n_servers=64, n_jobs=400):
@@ -65,6 +84,13 @@ def run(verbose=True, sizes=(64, 512, 4096, 20480)):
     out["replicas8"] = {"events_per_s": eps}
     if verbose:
         row("bench_engine_replicas8", 1e6 / eps, f"agg_events/s={eps:.0f}")
+    tel = telemetry_overhead()
+    out["telemetry"] = tel
+    if verbose:
+        row("bench_engine_telemetry", 1e6 / max(tel["events_per_s_on"], 1e-9),
+            f"off={tel['events_per_s_off']:.0f}ev/s "
+            f"on={tel['events_per_s_on']:.0f}ev/s "
+            f"overhead={tel['overhead_frac']:.1%}")
     return out
 
 

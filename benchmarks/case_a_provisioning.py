@@ -32,17 +32,22 @@ def run(n_jobs=3000, seed=0, verbose=True):
     # (servers put aside) while all jobs still finish
     frac_sleeping = res.residency[:, SrvState.PKG_C6].sum() \
         / res.residency.sum()
+    ts = res.telemetry        # device-side histograms / QoS (telemetry.py)
     stats = {
         "finished": res.n_finished, "n_jobs": res.n_jobs,
         "mean_power_W": res.mean_power,
         "p95_ms": res.p95_latency * 1e3,
+        "hist_p99_ms": ts.job_p99 * 1e3,
+        "ed_product_Js": ts.energy_delay_product,
+        "tail_violations": ts.tail_violations,
         "frac_time_sleeping": frac_sleeping,
         "events": res.events, "wall_s": dt,
     }
     if verbose:
         row("case_a_provisioning", dt / max(res.events, 1) * 1e6,
             f"finished={res.n_finished}/{res.n_jobs} "
-            f"sleep_frac={frac_sleeping:.2f} p95={res.p95_latency*1e3:.1f}ms")
+            f"sleep_frac={frac_sleeping:.2f} p95={res.p95_latency*1e3:.1f}ms "
+            f"p99={ts.job_p99*1e3:.1f}ms ED={ts.energy_delay_product:.1f}J.s")
     assert res.n_finished == res.n_jobs
     assert frac_sleeping > 0.3, "provisioning failed to park servers"
     return stats

@@ -99,14 +99,21 @@ def run(verbose=True, n_jobs=2000):
                           hi_frac=0.3, n_jobs=n_jobs, n_servers=n_servers)
         sav_ai = 1 - dual.server_energy / base.server_energy
         sav_single = 1 - dual.server_energy / best_single.server_energy
+        # energy-delay trade-off from device telemetry: sleeping deeper must
+        # not blow up E·D vs Active-Idle
+        ed_ratio = dual.telemetry.energy_delay_product \
+            / max(base.telemetry.energy_delay_product, 1e-12)
         results[f"dual_{n_servers}"] = {
             "saving_vs_active_idle": sav_ai,
             "saving_vs_single": sav_single,
             "p95_ratio": dual.p95_latency / max(base.p95_latency, 1e-9),
+            "ed_ratio_vs_active_idle": ed_ratio,
+            "hist_p99_ms": dual.telemetry.job_p99 * 1e3,
         }
         if verbose:
             row(f"case_b_dual_n{n_servers}", 0.0,
-                f"save_vs_AI={sav_ai:.1%} save_vs_single={sav_single:.1%}")
+                f"save_vs_AI={sav_ai:.1%} save_vs_single={sav_single:.1%} "
+                f"ED_ratio={ed_ratio:.2f}")
     return results
 
 

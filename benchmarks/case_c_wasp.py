@@ -59,6 +59,9 @@ def run(n_jobs=4000, verbose=True):
             "pkgc6_frac": pkg_frac, "util": wasp.utilization,
             "saving_vs_timer": saving, "top3_energy_share": skew,
             "p95_ms": wasp.p95_latency * 1e3,
+            "hist_p99_ms": wasp.telemetry.job_p99 * 1e3,
+            "ed_product_Js": wasp.telemetry.energy_delay_product,
+            "tail_violations": wasp.telemetry.tail_violations,
             "finished": wasp.n_finished,
         }
         if verbose:
@@ -66,7 +69,7 @@ def run(n_jobs=4000, verbose=True):
                 dt / max(wasp.events, 1) * 1e6,
                 f"active={active_frac:.2f} (util {wasp.utilization:.2f}) "
                 f"s3={s3_frac:.2f} save_vs_timer={saving:.1%} "
-                f"top3={skew:.2f}")
+                f"top3={skew:.2f} ED={wasp.telemetry.energy_delay_product:.1f}")
         assert wasp.n_finished == n_jobs
     return results
 

@@ -48,13 +48,17 @@ def run(n_jobs=300, verbose=True):
                      "switch_energy": res.switch_energy,
                      "p95_ms": res.p95_latency * 1e3,
                      "mean_ms": res.mean_latency * 1e3,
+                     "hist_p99_ms": res.telemetry.job_p99 * 1e3,
+                     "ed_product_Js": res.telemetry.energy_delay_product,
                      "finished": res.n_finished,
                      "events": res.events, "wall_s": dt}
         if verbose:
             row(f"case_d_{name}", dt / max(res.events, 1) * 1e6,
                 f"srv={res.server_energy:.0f}J "
                 f"net={res.switch_energy:.0f}J "
-                f"p95={res.p95_latency*1e3:.1f}ms fin={res.n_finished}")
+                f"p95={res.p95_latency*1e3:.1f}ms "
+                f"ED={res.telemetry.energy_delay_product:.0f}J.s "
+                f"fin={res.n_finished}")
 
     sb, na = out["server_balanced"], out["net_aware"]
     out["saving_server"] = 1 - na["server_energy"] / sb["server_energy"]

@@ -17,21 +17,39 @@ import numpy as np
 # ---------------------------------------------------------------- 1. DES
 from repro.core import farm, workload
 from repro.core.jobs import dag_single
-from repro.core.types import SimConfig, SleepPolicy, SrvState
+from repro.core.types import SimConfig, SleepPolicy, SrvState, \
+    TelemetryConfig
 
 cfg = SimConfig(n_servers=16, n_cores=4, max_jobs=2048, tasks_per_job=1,
                 sleep_policy=SleepPolicy.SINGLE_TIMER,
-                sleep_state=SrvState.PKG_C6, max_events=60_000)
+                sleep_state=SrvState.PKG_C6, max_events=60_000,
+                telemetry=TelemetryConfig(window_dt=0.05,
+                                          tail_thresh=0.05))
 rng = np.random.default_rng(0)
 arr = workload.mmpp2_arrivals(lam_h=2000.0, lam_l=200.0, r_hl=2.0, r_lh=1.0,
                               n_jobs=1500, seed=1)
-specs = [dag_single(rng.exponential(0.005)) for _ in range(1500)]
+# jobs carry a 100ms SLA tracked on device (telemetry.py QoS counters)
+specs = [dag_single(rng.exponential(0.005), sla=0.1) for _ in range(1500)]
 res = farm.simulate(cfg, arr, specs, tau=0.05)
 print(f"[dcsim] {res.n_finished}/{res.n_jobs} jobs, "
       f"mean latency {res.mean_latency*1e3:.2f} ms, "
       f"p95 {res.p95_latency*1e3:.2f} ms, "
       f"mean power {res.mean_power:.0f} W "
       f"({res.events} events in {res.sim_time:.2f}s simulated)")
+
+# device-side telemetry: histogram percentiles, QoS, energy-delay product,
+# and windowed time series — all accumulated inside the jitted event loop
+ts = res.telemetry
+print(f"[dcsim] telemetry: p50/p95/p99 = {ts.job_p50*1e3:.2f}/"
+      f"{ts.job_p95*1e3:.2f}/{ts.job_p99*1e3:.2f} ms (from device hist), "
+      f"SLA miss {ts.sla_miss}/{ts.sla_total}, "
+      f"tail>{cfg.telemetry.tail_thresh*1e3:.0f}ms: {ts.tail_violations}, "
+      f"E.D = {ts.energy_delay_product:.2f} J.s")
+occ = ts.occupancy > 0
+print(f"[dcsim] {ts.n_windows_used} windows: awake servers "
+      f"min {ts.awake_servers[occ].min():.1f} / "
+      f"max {ts.awake_servers[occ].max():.1f}, "
+      f"peak power {np.nanmax(ts.server_power):.0f} W")
 
 # ---------------------------------------------------------------- 2. LM
 from repro import configs

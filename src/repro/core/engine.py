@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from . import network as net_mod
-from . import power, scheduler, server
+from . import power, scheduler, server, telemetry
 from .types import (INF, FlowTable, JobTable, NetState, SchedState,
                     ServerFarm, SimConfig, SimState, SrvState, TaskStatus,
                     init_farm, init_flows, init_net, init_sched, replace)
@@ -306,6 +306,17 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     t_next = jnp.where(t_next >= INF / 2, state.t, t_next)
     dt = t_next - state.t
 
+    telemetry_on = cfg.telemetry.enabled
+    if telemetry_on:
+        # window metrics integrate the PRE-advance state over [t, t_next)
+        # (piecewise constant, same exactness as the energy accrual);
+        # finish arrays are captured so the INF -> finite transition below
+        # identifies this step's completions.
+        wvals = telemetry.window_values(state, cfg, dt)
+        widx = telemetry.window_index(state.t, dt, cfg.telemetry)
+        old_job_finish = state.jobs.job_finish
+        old_task_finish = state.jobs.finish
+
     farm = power.accrue_server_energy(state.farm, cfg, dt)
     net = state.net
     if cfg.has_network:
@@ -337,6 +348,11 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
                                            cfg, state.t)
         state = replace(state, flows=flows, net=net)
 
+    if telemetry_on:
+        state = replace(state, telem=telemetry.accumulate(
+            state.telem, cfg, state.jobs, old_job_finish, old_task_finish,
+            widx, wvals))
+
     all_done = (~state.jobs.valid
                 | (state.jobs.status == TaskStatus.DONE)).all() \
         & (_next_arrival(state.jobs) >= INF)
@@ -359,6 +375,7 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None) -> SimState:
         flows=init_flows(cfg),
         net=init_net(n_sw, n_ports, n_links, n_lc, cfg),
         sched=init_sched(cfg),
+        telem=telemetry.init_telemetry(cfg),
         events=jnp.zeros((), jnp.int32),
         done=jnp.zeros((), bool),
     )

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import engine, jobs as jobs_mod
+from . import engine, jobs as jobs_mod, telemetry as telemetry_mod
 from .types import INF, SimConfig, SimState
 
 
@@ -33,6 +33,8 @@ class SimResult:
     utilization: float              # busy core-seconds / (N*C*T)
     dropped: int
     latencies: np.ndarray           # (J,) finished-job latencies (sec)
+    # device-side telemetry summary (None when cfg.telemetry.enabled=False)
+    telemetry: Optional[telemetry_mod.TelemetrySummary] = None
 
     @property
     def mean_power(self) -> float:
@@ -68,6 +70,8 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
                           / max(N * C * t, 1e-12)),
         dropped=int(state.farm.dropped),
         latencies=lat,
+        telemetry=(telemetry_mod.summarize(state, cfg)
+                   if cfg.telemetry.enabled else None),
     )
 
 

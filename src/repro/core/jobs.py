@@ -30,10 +30,11 @@ class JobSpec:
 
     service: np.ndarray          # (T,) per-task service times
     edges: list                  # list of (parent, child, bytes)
+    sla: float = INF             # latency deadline (sec); INF = no SLA
 
 
-def dag_single(service: float) -> JobSpec:
-    return JobSpec(service=np.asarray([service]), edges=[])
+def dag_single(service: float, sla: float = INF) -> JobSpec:
+    return JobSpec(service=np.asarray([service]), edges=[], sla=sla)
 
 
 def dag_chain(services, edge_bytes: float = 0.0) -> JobSpec:
@@ -78,6 +79,7 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
     dep_count = np.zeros((J, T), np.int32)
     children = np.full((J, T, D), -1, np.int32)
     edge_bytes = np.zeros((J, T, D))
+    sla = np.full((J,), INF)
 
     for j in range(n):
         spec = specs[j]
@@ -85,6 +87,7 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
         if t > T:
             raise ValueError(f"job {j}: {t} tasks > tasks_per_job={T}")
         arr[j] = arrivals[j]
+        sla[j] = getattr(spec, "sla", INF)
         service[j, :t] = spec.service
         valid[j, :t] = True
         slot = np.zeros(T, np.int32)
@@ -112,4 +115,5 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
         finish=jnp.full((J * T,), INF, cfg.time_dtype),
         job_finish=jnp.full((J,), INF, cfg.time_dtype),
         tasks_done=jnp.zeros((J,), jnp.int32),
+        sla=jnp.asarray(sla, jnp.float32),
     )

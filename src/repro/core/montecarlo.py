@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import engine, jobs as jobs_mod
+from . import engine, jobs as jobs_mod, telemetry
 from .types import INF, SimConfig
 
 
@@ -46,28 +46,56 @@ def run_replicas(cfg: SimConfig, state_b, tc=None, mesh=None):
     if mesh is None:
         return jax.jit(runner)(state_b)
     from jax.sharding import PartitionSpec as P
+
+    from ..sharding.compat import shard_map
     spec = P(tuple(mesh.axis_names))          # prefix spec: replica dim 0
-    fn = jax.shard_map(runner, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                       check_vma=False)
+    fn = shard_map(runner, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                   check_vma=False)
     return jax.jit(fn)(state_b)
 
 
 def replica_stats(state_b, cfg: SimConfig):
-    """Host-side per-replica summaries -> dict of numpy arrays."""
+    """Host-side per-replica summaries -> dict of numpy arrays.
+
+    Replicas that finish zero jobs get NaN latency stats without tripping
+    numpy's all-NaN RuntimeWarnings.  Percentiles come from the device-side
+    telemetry histograms (one (R, B) array off-device instead of the (R, J)
+    job tables) when telemetry is enabled; otherwise from the exact
+    per-job latencies.
+    """
     arr = np.asarray(state_b.jobs.arrival)                # (R, J)
     fin = np.asarray(state_b.jobs.job_finish)
     ok = (fin < INF / 2) & (arr < INF / 2)
-    lat = np.where(ok, fin - arr, np.nan)
+    finished = ok.sum(axis=1)
+    lat_sum = np.where(ok, fin - arr, 0.0).sum(axis=1)
+    mean_lat = np.where(finished > 0,
+                        lat_sum / np.maximum(finished, 1), np.nan)
     energy = np.asarray(state_b.farm.energy).sum(axis=1)  # (R,)
     t = np.asarray(state_b.t)
+
+    tcfg = cfg.telemetry
+    if tcfg.enabled:
+        hist = np.asarray(state_b.telem.job_hist)         # (R, B)
+        pct = {q: telemetry.hist_percentile(hist, tcfg.lat_lo,
+                                            tcfg.lat_hi, q)
+               for q in (50, 95, 99)}
+    else:
+        def _exact(q):
+            return np.asarray([
+                np.percentile((fin[r] - arr[r])[ok[r]], q)
+                if finished[r] else np.nan
+                for r in range(arr.shape[0])])
+        pct = {q: _exact(q) for q in (50, 95, 99)}
     return {
-        "mean_latency": np.nanmean(lat, axis=1),
-        "p95_latency": np.nanpercentile(lat, 95, axis=1),
+        "mean_latency": mean_lat,
+        "p50_latency": pct[50],
+        "p95_latency": pct[95],
+        "p99_latency": pct[99],
         "energy": energy,
         "sim_time": t,
         "mean_power": energy / np.maximum(t, 1e-12),
         "events": np.asarray(state_b.events),
-        "finished": ok.sum(axis=1),
+        "finished": finished,
     }
 
 

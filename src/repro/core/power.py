@@ -15,7 +15,7 @@ from .types import (INF, LinecardState, NetState, PortState, ServerFarm,
                     SimConfig, SrvState, replace)
 
 __all__ = ["server_power", "accrue_server_energy", "accrue_switch_energy",
-           "switch_power"]
+           "switch_power", "total_power"]
 
 
 def server_power(farm: ServerFarm, cfg: SimConfig):
@@ -62,6 +62,17 @@ def switch_power(net: NetState, cfg: SimConfig):
     lc_p = jnp.where(net.lc_state == LinecardState.ACTIVE,
                      swp.p_linecard_active, swp.p_linecard_sleep)
     return chassis + port_p.sum(axis=1) + lc_p.sum(axis=1)
+
+
+def total_power(farm: ServerFarm, net: NetState, cfg: SimConfig):
+    """Instantaneous fleet-wide (server_total, switch_total) watts — the
+    power signal sampled by the telemetry windows (core/telemetry.py)."""
+    p_srv = server_power(farm, cfg)[0].sum()
+    if cfg.has_network:
+        p_sw = switch_power(net, cfg).sum()
+    else:
+        p_sw = jnp.float32(0.0)
+    return p_srv.astype(jnp.float32), p_sw.astype(jnp.float32)
 
 
 def accrue_switch_energy(net: NetState, cfg: SimConfig, dt) -> NetState:

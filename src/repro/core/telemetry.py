@@ -1,0 +1,268 @@
+"""Device-side telemetry: streaming histograms, windowed time series, and
+QoS/SLA tracking inside the jitted DES loop.
+
+The paper's case studies (§IV) all read *distributions* — per-job latency
+percentiles (Fig 5-6), power-state residency over time (Fig 8), energy-delay
+trade-offs — not just end-of-run scalars.  This module accumulates them on
+device, entirely inside ``lax.while_loop``:
+
+  * **Latency histograms** — fixed-bin log-spaced histograms at job and task
+    granularity.  p50/p95/p99 are recovered host-side from the bins
+    (:func:`hist_percentile`) with at most one-bin-width error, so a vmapped
+    replica sweep ships (R, B) histograms instead of (R, J) job tables.
+  * **Windowed time series** — per-bucket time-weighted sums of active jobs,
+    awake servers, queue depth, server/switch power, and per-power-state
+    server counts.  A DES interval [t, t_next) is piecewise constant, so
+    ``metric * dt`` scattered into the window containing the interval
+    midpoint integrates the series exactly up to window-boundary rounding.
+  * **QoS/SLA counters** — deadline misses against a per-job ``sla`` field
+    and tail-latency violations against a global threshold.
+
+The hot accumulation path has two interchangeable backends: the fused Pallas
+kernel (``kernels/telemetry_bin.py`` — histogram binning + window bucketing
+in one VMEM pass) and its pure-jnp oracle (``kernels/ref.py``), selected by
+``TelemetryConfig.use_kernel``.  Off-TPU the kernel runs in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import power
+from .types import (INF, SimConfig, SrvState, TaskStatus, Telemetry,
+                    TelemetryConfig, replace)
+
+__all__ = ["init_telemetry", "window_values", "accumulate", "summarize",
+           "hist_percentile", "hist_mean", "bin_edges", "TelemetrySummary",
+           "WIN_COLS"]
+
+# ``Telemetry.win`` column layout (all columns are time-weighted sums;
+# column WIN_OCC accumulates dt itself, i.e. the occupancy used to
+# normalize the others back to time averages).
+WIN_OCC = 0          # sum of dt landing in this window
+WIN_ACTIVE_JOBS = 1  # tasks in flight (READY|QUEUED|RUNNING) · dt
+WIN_AWAKE = 2        # servers in ACTIVE|IDLE · dt
+WIN_QDEPTH = 3       # local + global queue occupancy · dt
+WIN_SRV_POWER = 4    # total server power (W) · dt  == joules per window
+WIN_SW_POWER = 5     # total switch power (W) · dt
+WIN_STATE0 = 6       # server count in SrvState s · dt, s = 0..NUM-1
+WIN_COLS = WIN_STATE0 + SrvState.NUM
+
+
+# ==========================================================================
+# state init
+# ==========================================================================
+
+def init_telemetry(cfg: SimConfig) -> Telemetry:
+    """Zeroed telemetry pytree; minimal (1-sized) arrays when disabled so
+    the disabled path carries no per-step cost and ~no memory."""
+    tcfg = cfg.telemetry
+    B = tcfg.n_bins if tcfg.enabled else 1
+    W = tcfg.n_windows if tcfg.enabled else 1
+    return Telemetry(
+        job_hist=jnp.zeros((B,), jnp.float32),
+        task_hist=jnp.zeros((B,), jnp.float32),
+        win=jnp.zeros((W, WIN_COLS), jnp.float32),
+        sla_miss=jnp.zeros((), jnp.int32),
+        sla_total=jnp.zeros((), jnp.int32),
+        tail_viol=jnp.zeros((), jnp.int32),
+    )
+
+
+# ==========================================================================
+# in-loop accumulation
+# ==========================================================================
+
+def window_values(state, cfg: SimConfig, dt) -> jnp.ndarray:
+    """(WIN_COLS,) metric·dt vector for the piecewise-constant interval
+    [t, t+dt) — computed from the PRE-advance state, matching the exact
+    energy integration in power.accrue_server_energy."""
+    farm = state.farm
+    dtf = dt.astype(jnp.float32)
+    s = state.jobs.status
+    active = ((s == TaskStatus.READY) | (s == TaskStatus.QUEUED)
+              | (s == TaskStatus.RUNNING)).sum().astype(jnp.float32)
+    awake = ((farm.srv_state == SrvState.ACTIVE)
+             | (farm.srv_state == SrvState.IDLE)).sum().astype(jnp.float32)
+    qdepth = (farm.q_len.sum() + state.sched.gq_len).astype(jnp.float32)
+    p_srv, p_sw = power.total_power(farm, state.net, cfg)
+    per_state = (farm.srv_state[:, None]
+                 == jnp.arange(SrvState.NUM)[None, :]).sum(0)
+    head = jnp.stack([jnp.float32(1.0), active, awake, qdepth, p_srv, p_sw])
+    return jnp.concatenate([head, per_state.astype(jnp.float32)]) * dtf
+
+
+def window_index(t, dt, tcfg: TelemetryConfig) -> jnp.ndarray:
+    """Window containing the interval midpoint, clamped into range."""
+    mid = t.astype(jnp.float32) + 0.5 * dt.astype(jnp.float32)
+    return jnp.clip((mid / tcfg.window_dt).astype(jnp.int32),
+                    0, tcfg.n_windows - 1)
+
+
+def accumulate(telem: Telemetry, cfg: SimConfig, jobs, old_job_finish,
+               old_task_finish, widx, wvals) -> Telemetry:
+    """One per-step telemetry update: bin the latencies of jobs/tasks that
+    finished this step, bucket the window metrics, bump QoS counters.
+
+    ``old_*_finish`` are the finish arrays captured before this step's event
+    appliers ran — the INF -> finite transition identifies new completions.
+    """
+    tcfg = cfg.telemetry
+    T = cfg.tasks_per_job
+
+    new_job = (old_job_finish >= INF / 2) & (jobs.job_finish < INF / 2)
+    job_lat = jnp.maximum(jobs.job_finish - jobs.arrival, 0.0)
+    jw = new_job.astype(jnp.float32)
+
+    new_task = (old_task_finish >= INF / 2) & (jobs.finish < INF / 2)
+    # task latency = task finish - its job's arrival (sojourn to this stage)
+    arr_t = jnp.repeat(jobs.arrival, T)
+    task_lat = jnp.maximum(jobs.finish - arr_t, 0.0)
+    tw = new_task.astype(jnp.float32)
+
+    has_sla = jobs.sla < INF / 2
+    miss = (new_job & has_sla & (job_lat > jobs.sla)).sum().astype(jnp.int32)
+    tot = (new_job & has_sla).sum().astype(jnp.int32)
+    tail = (new_job & (job_lat > tcfg.tail_thresh)).sum().astype(jnp.int32)
+
+    if tcfg.use_kernel:
+        from ..kernels import telemetry_bin
+        interp = jax.default_backend() != "tpu"
+        jh, th, win = telemetry_bin.telemetry_accum(
+            job_lat, jw, task_lat, tw, telem.job_hist, telem.task_hist,
+            telem.win, widx, wvals, tcfg.lat_lo, tcfg.lat_hi,
+            interpret=interp)
+    else:
+        from ..kernels import ref
+        jh, th, win = ref.telemetry_accum_reference(
+            job_lat, jw, task_lat, tw, telem.job_hist, telem.task_hist,
+            telem.win, widx, wvals, tcfg.lat_lo, tcfg.lat_hi)
+
+    return replace(telem, job_hist=jh, task_hist=th, win=win,
+                   sla_miss=telem.sla_miss + miss,
+                   sla_total=telem.sla_total + tot,
+                   tail_viol=telem.tail_viol + tail)
+
+
+# ==========================================================================
+# host-side summarization
+# ==========================================================================
+
+def bin_edges(tcfg: TelemetryConfig) -> np.ndarray:
+    """(B+1,) log-spaced histogram bin edges in seconds."""
+    return tcfg.lat_lo * (tcfg.lat_hi / tcfg.lat_lo) ** (
+        np.arange(tcfg.n_bins + 1) / tcfg.n_bins)
+
+
+def _centers(lo: float, hi: float, n_bins: int) -> np.ndarray:
+    # geometric bin centers of the log-spaced grid
+    return lo * (hi / lo) ** ((np.arange(n_bins) + 0.5) / n_bins)
+
+
+def hist_percentile(hist, lo: float, hi: float, q: float) -> np.ndarray:
+    """Percentile(s) recovered from log-spaced histogram(s).
+
+    ``hist`` is (..., B); returns (...) — the geometric center of the first
+    bin whose CDF reaches q%.  Error vs the exact percentile is at most one
+    bin width.  Empty histograms return NaN (no warnings).
+    """
+    h = np.asarray(hist, np.float64)
+    B = h.shape[-1]
+    total = h.sum(axis=-1)
+    cdf = np.cumsum(h, axis=-1)
+    target = (q / 100.0) * total[..., None]
+    idx = np.clip((cdf < target).sum(axis=-1), 0, B - 1)
+    vals = _centers(lo, hi, B)[idx]
+    return np.where(total > 0, vals, np.nan)
+
+
+def hist_mean(hist, lo: float, hi: float) -> np.ndarray:
+    """Mean latency estimated from log-spaced histogram(s) (..., B)."""
+    h = np.asarray(hist, np.float64)
+    total = h.sum(axis=-1)
+    est = (h * _centers(lo, hi, h.shape[-1])).sum(axis=-1)
+    return np.where(total > 0, est / np.maximum(total, 1.0), np.nan)
+
+
+@dataclasses.dataclass
+class TelemetrySummary:
+    """Host-side view of one run's Telemetry (numpy)."""
+
+    # histogram-derived latency percentiles (seconds)
+    job_p50: float
+    job_p95: float
+    job_p99: float
+    task_p50: float
+    task_p95: float
+    task_p99: float
+    mean_latency: float             # histogram-estimated
+    jobs_binned: int
+    tasks_binned: int
+    # QoS / SLA
+    sla_miss: int
+    sla_total: int
+    tail_violations: int
+    # energy·delay product (J·s): total energy × histogram mean latency
+    energy_delay_product: float
+    # windowed time series (time-averaged per window; NaN where empty)
+    times: np.ndarray               # (W,) window centers (sec)
+    occupancy: np.ndarray           # (W,) seconds of sim time per window
+    active_jobs: np.ndarray         # (W,)
+    awake_servers: np.ndarray       # (W,)
+    queue_depth: np.ndarray         # (W,)
+    server_power: np.ndarray        # (W,) watts
+    switch_power: np.ndarray        # (W,) watts
+    state_residency: np.ndarray     # (W, SrvState.NUM) seconds
+    n_windows_used: int
+
+    @property
+    def sla_miss_rate(self) -> float:
+        return self.sla_miss / max(self.sla_total, 1)
+
+
+def summarize(state, cfg: SimConfig) -> TelemetrySummary:
+    """Summarize a finished SimState's device telemetry on the host."""
+    tcfg = cfg.telemetry
+    if not tcfg.enabled:
+        raise ValueError("telemetry was disabled for this run "
+                         "(cfg.telemetry.enabled=False)")
+    telem = state.telem
+    jh = np.asarray(telem.job_hist)
+    th = np.asarray(telem.task_hist)
+    win = np.asarray(telem.win, np.float64)
+    lo, hi = tcfg.lat_lo, tcfg.lat_hi
+
+    occ = win[:, WIN_OCC]
+    norm = np.where(occ > 0, occ, np.nan)
+    used = int((occ > 0).sum())
+    energy = float(np.asarray(state.farm.energy).sum()
+                   + np.asarray(state.net.sw_energy).sum())
+    mean_lat = float(hist_mean(jh, lo, hi))
+    return TelemetrySummary(
+        job_p50=float(hist_percentile(jh, lo, hi, 50)),
+        job_p95=float(hist_percentile(jh, lo, hi, 95)),
+        job_p99=float(hist_percentile(jh, lo, hi, 99)),
+        task_p50=float(hist_percentile(th, lo, hi, 50)),
+        task_p95=float(hist_percentile(th, lo, hi, 95)),
+        task_p99=float(hist_percentile(th, lo, hi, 99)),
+        mean_latency=mean_lat,
+        jobs_binned=int(jh.sum()),
+        tasks_binned=int(th.sum()),
+        sla_miss=int(telem.sla_miss),
+        sla_total=int(telem.sla_total),
+        tail_violations=int(telem.tail_viol),
+        energy_delay_product=energy * mean_lat if mean_lat == mean_lat
+        else float("nan"),
+        times=(np.arange(tcfg.n_windows) + 0.5) * tcfg.window_dt,
+        occupancy=occ,
+        active_jobs=win[:, WIN_ACTIVE_JOBS] / norm,
+        awake_servers=win[:, WIN_AWAKE] / norm,
+        queue_depth=win[:, WIN_QDEPTH] / norm,
+        server_power=win[:, WIN_SRV_POWER] / norm,
+        switch_power=win[:, WIN_SW_POWER] / norm,
+        state_residency=win[:, WIN_STATE0:WIN_STATE0 + SrvState.NUM],
+        n_windows_used=used,
+    )

@@ -152,6 +152,33 @@ class SwitchPowerProfile:
 
 
 @dataclass(frozen=True)
+class TelemetryConfig:
+    """Device-side telemetry (histograms / windowed series / QoS) knobs.
+
+    The simulator accumulates distributions *inside* the jitted event loop
+    (core/telemetry.py) so replica sweeps never haul per-job tables off
+    device.  All fields are static (hashable) — they size the Telemetry
+    pytree arrays.
+    """
+
+    enabled: bool = True
+    # log-spaced latency histogram: n_bins bins over [lat_lo, lat_hi) sec
+    n_bins: int = 64
+    lat_lo: float = 1.0e-5
+    lat_hi: float = 1.0e3
+    # windowed time series: n_windows buckets of window_dt seconds (times
+    # past the last window clamp into it)
+    n_windows: int = 256
+    window_dt: float = 0.1
+    # QoS: job latency above this counts as a tail-latency violation;
+    # per-job deadlines come from JobTable.sla
+    tail_thresh: float = 1.0
+    # route the hot accumulation through the fused Pallas kernel
+    # (kernels/telemetry_bin.py); off-TPU it falls back to interpret mode
+    use_kernel: bool = False
+
+
+@dataclass(frozen=True)
 class SimConfig:
     """Static shape/topology/policy configuration (hashable; jit-static)."""
 
@@ -186,6 +213,8 @@ class SimConfig:
     # power profiles
     server_power: ServerPowerProfile = field(default_factory=ServerPowerProfile)
     switch_power: SwitchPowerProfile = field(default_factory=SwitchPowerProfile)
+    # device-side telemetry subsystem
+    telemetry: TelemetryConfig = field(default_factory=TelemetryConfig)
     time_dtype: Any = jnp.float32
 
     @property
@@ -236,6 +265,7 @@ class JobTable:
     finish: jnp.ndarray             # (J*T,) task finish time
     job_finish: jnp.ndarray         # (J,) completion time (INF if not done)
     tasks_done: jnp.ndarray         # (J,) per-job finished-task count
+    sla: jnp.ndarray                # (J,) latency deadline (INF = no SLA)
 
 
 @pytree_dataclass
@@ -271,6 +301,24 @@ class SchedState:
 
 
 @pytree_dataclass
+class Telemetry:
+    """Device-side streaming telemetry accumulated inside the event loop.
+
+    ``win`` packs all windowed time series as time-weighted column sums
+    (metric·dt scattered into the window containing the interval midpoint);
+    dividing by the occupancy column recovers time-averaged values.  Column
+    layout is ``core/telemetry.py`` (WIN_* constants).
+    """
+
+    job_hist: jnp.ndarray           # (B,) job-latency histogram (weights)
+    task_hist: jnp.ndarray          # (B,) task-latency histogram
+    win: jnp.ndarray                # (W, K) windowed time-weighted series
+    sla_miss: jnp.ndarray           # () jobs finishing past their sla
+    sla_total: jnp.ndarray          # () finished jobs with a finite sla
+    tail_viol: jnp.ndarray          # () jobs with latency > tail_thresh
+
+
+@pytree_dataclass
 class SimState:
     t: jnp.ndarray                  # () current simulation time
     farm: ServerFarm
@@ -278,6 +326,7 @@ class SimState:
     flows: FlowTable
     net: NetState
     sched: SchedState
+    telem: Telemetry
     events: jnp.ndarray             # () processed event count
     done: jnp.ndarray               # () bool — all jobs finished
 

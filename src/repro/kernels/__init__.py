@@ -7,5 +7,7 @@ wrapper (ops.py) and a pure-jnp oracle (ref.py):
                    scratch across sequential time chunks
   dcsim_step       the simulator's fused farm-advance (min + energy +
                    completion) — the TPU analogue of the event-queue pop
+  telemetry_bin    fused telemetry accumulation (latency-histogram binning
+                   + time-series window bucketing in one VMEM pass)
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref, telemetry_bin  # noqa: F401

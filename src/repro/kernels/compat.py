@@ -1,0 +1,11 @@
+"""Pallas TPU API drift shims.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer
+jax releases; resolve whichever exists so the kernels run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -22,7 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from .compat import CompilerParams
 
 INF = 1.0e30
 
@@ -96,7 +98,7 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
             jax.ShapeDtypeStruct((Np,), jnp.float32),
             jax.ShapeDtypeStruct((Np,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(t1, t2, core_busy, srv_state, energy, busy_seconds, state_power)

@@ -58,6 +58,31 @@ def ssm_scan_reference(dt, Bm, Cm, x, A):
     return ys.transpose(1, 0, 2).astype(x.dtype), h
 
 
+def log_bin(vals, lo: float, hi: float, n_bins: int):
+    """Log-spaced histogram bin index for each value: values below ``lo``
+    clamp into bin 0, values >= ``hi`` into bin n_bins-1."""
+    scale = n_bins / math.log(hi / lo)
+    raw = jnp.log(jnp.maximum(vals, lo) / lo) * scale
+    return jnp.clip(raw.astype(jnp.int32), 0, n_bins - 1)
+
+
+def telemetry_accum_reference(job_vals, job_wts, task_vals, task_wts,
+                              job_hist, task_hist, win, widx, wvals,
+                              lo, hi):
+    """One fused telemetry update (the oracle for telemetry_bin.py):
+
+      job_hist  += histogram(job_vals, weights=job_wts)   (log-spaced bins)
+      task_hist += histogram(task_vals, weights=task_wts)
+      win[widx] += wvals                                  (window bucketing)
+
+    Returns (job_hist, task_hist, win)."""
+    B = job_hist.shape[0]
+    jh = job_hist.at[log_bin(job_vals, lo, hi, B)].add(job_wts)
+    th = task_hist.at[log_bin(task_vals, lo, hi, B)].add(task_wts)
+    w = win.at[widx].add(wvals)
+    return jh, th, w
+
+
 def dcsim_advance_reference(core_busy, srv_state, energy, busy_seconds,
                             t, t_next, state_power, p_core_active,
                             p_core_idle, inf=1.0e30):

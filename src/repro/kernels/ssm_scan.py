@@ -22,7 +22,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from .compat import CompilerParams
 
 
 def _kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, y_ref, h_ref, *, chunk_t):
@@ -76,7 +78,7 @@ def ssm_scan(dt, Bm, Cm, x, A, *, block_d=256, chunk_t=16, interpret=False):
                                lambda b, d, t: (b, t, d)),
         out_shape=jax.ShapeDtypeStruct((B, S, Dss), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(dt, Bm, Cm, x, A)

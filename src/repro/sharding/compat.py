@@ -1,0 +1,32 @@
+"""JAX mesh-context API drift shims.
+
+``jax.set_mesh`` (newer releases) / ``jax.sharding.use_mesh`` (0.4.35+) /
+``with mesh:`` (classic Mesh context manager) all install an ambient mesh
+for NamedSharding resolution; resolve whichever this jax provides.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    fn = getattr(jax, "set_mesh", None) \
+        or getattr(jax.sharding, "use_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh          # jax.sharding.Mesh is itself a context manager
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` (newer) / ``jax.experimental.shard_map.shard_map``
+    (older, where ``check_vma`` was spelled ``check_rep``)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kw)
+    from jax.experimental.shard_map import shard_map as legacy
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  **kw)

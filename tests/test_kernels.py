@@ -4,12 +4,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    # optional dev dependency (pyproject [dev]); without it the
+    # property-based sweeps fall back to fixed parametrized examples
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssm_scan import ssm_scan
 from repro.kernels.dcsim_step import dcsim_advance, INF
+from repro.kernels.telemetry_bin import telemetry_accum
 
 
 # --------------------------------------------------------------------------
@@ -85,9 +93,7 @@ def test_ssm_scan_matches_ref(B, S, Dss, N, block_d, chunk_t, dtype):
 # dcsim advance
 # --------------------------------------------------------------------------
 
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(3, 300), c=st.integers(1, 4), seed=st.integers(0, 999))
-def test_dcsim_advance_matches_ref(n, c, seed):
+def _check_dcsim_advance(n, c, seed):
     rng = np.random.default_rng(seed)
     t = np.float32(rng.uniform(0, 10))
     t_next = np.float32(t + rng.uniform(0, 1))
@@ -109,3 +115,66 @@ def test_dcsim_advance_matches_ref(n, c, seed):
     for g, e in zip(got, exp):
         np.testing.assert_allclose(np.float32(g), np.float32(e),
                                    rtol=1e-5, atol=1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(3, 300), c=st.integers(1, 4),
+           seed=st.integers(0, 999))
+    def test_dcsim_advance_matches_ref(n, c, seed):
+        _check_dcsim_advance(n, c, seed)
+else:
+    @pytest.mark.parametrize("n,c,seed", [
+        (3, 1, 0), (17, 2, 5), (120, 3, 7), (256, 4, 11), (300, 1, 42),
+    ])
+    def test_dcsim_advance_matches_ref(n, c, seed):
+        _check_dcsim_advance(n, c, seed)
+
+
+# --------------------------------------------------------------------------
+# telemetry accumulation
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("J,M,B,W,block", [
+    (64, 64, 32, 16, 64),        # single block
+    (200, 700, 64, 32, 256),     # uneven streams, padding
+    (1024, 100, 128, 8, 512),    # job stream longer than task stream
+])
+def test_telemetry_accum_matches_ref(J, M, B, W, block):
+    K = 12
+    rng = np.random.default_rng(B + J)
+    jv = jnp.asarray(rng.uniform(1e-6, 50.0, J), jnp.float32)
+    jw = jnp.asarray(rng.random(J) < 0.4, jnp.float32)
+    tv = jnp.asarray(rng.uniform(1e-6, 50.0, M), jnp.float32)
+    tw = jnp.asarray(rng.random(M) < 0.6, jnp.float32)
+    jh = jnp.asarray(rng.uniform(0, 5, B), jnp.float32)
+    th = jnp.asarray(rng.uniform(0, 5, B), jnp.float32)
+    win = jnp.asarray(rng.uniform(0, 1, (W, K)), jnp.float32)
+    widx = jnp.asarray(rng.integers(0, W), jnp.int32)
+    wvals = jnp.asarray(rng.uniform(0, 1, K), jnp.float32)
+    lo, hi = 1e-5, 1e3
+
+    got = telemetry_accum(jv, jw, tv, tw, jh, th, win, widx, wvals,
+                          lo, hi, block=block, interpret=True)
+    exp = ref.telemetry_accum_reference(jv, jw, tv, tw, jh, th, win,
+                                        widx, wvals, lo, hi)
+    for g, e in zip(got, exp):
+        np.testing.assert_allclose(np.float32(g), np.float32(e),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_telemetry_hist_mass_and_range():
+    """Every unit of weight lands in exactly one bin; out-of-range values
+    clamp into the edge bins."""
+    B, K, W = 16, 12, 4
+    vals = jnp.asarray([1e-9, 1e-5, 0.5, 1e3, 1e7], jnp.float32)
+    wts = jnp.ones_like(vals)
+    z = jnp.zeros((1,), jnp.float32)
+    jh, th, _ = ref.telemetry_accum_reference(
+        vals, wts, z, z, jnp.zeros((B,), jnp.float32),
+        jnp.zeros((B,), jnp.float32), jnp.zeros((W, K), jnp.float32),
+        jnp.asarray(0, jnp.int32), jnp.zeros((K,), jnp.float32),
+        1e-5, 1e3)
+    assert float(jh.sum()) == pytest.approx(5.0)
+    assert float(jh[0]) >= 2.0          # 1e-9 and 1e-5 clamp to bin 0
+    assert float(jh[-1]) >= 2.0         # 1e3 and 1e7 clamp to bin B-1

@@ -1,0 +1,194 @@
+"""Device-side telemetry subsystem: histogram percentiles vs the exact
+host-side oracle on an M/M/k scenario (both the jnp reference path and the
+fused Pallas kernel), window-series conservation laws, QoS/SLA counters,
+and the vmapped replica path."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import farm, montecarlo, telemetry, workload
+from repro.core.jobs import dag_single
+from repro.core.types import INF, SimConfig, SleepPolicy, TelemetryConfig
+from repro.kernels import ref
+from repro.kernels.telemetry_bin import telemetry_accum
+
+# tight bins so "within one bin width" is a meaningful tolerance:
+# ratio between adjacent edges = (10/1e-4)^(1/128) ~ 1.094
+TEL = TelemetryConfig(n_bins=128, lat_lo=1e-4, lat_hi=10.0,
+                      n_windows=128, window_dt=0.05, tail_thresh=0.04)
+
+
+def _mmk_run(sla=INF, tel=TEL, n_jobs=400):
+    """Poisson arrivals + exponential service on k parallel servers."""
+    cfg = SimConfig(n_servers=4, n_cores=2, local_q=64, max_jobs=512,
+                    tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=20_000, telemetry=tel)
+    rng = np.random.default_rng(0)
+    lam = workload.utilization_to_rate(0.6, 0.01, 4, 2)
+    arr = workload.poisson_arrivals(lam, n_jobs, seed=1)
+    specs = [dag_single(rng.exponential(0.01), sla=sla)
+             for _ in range(n_jobs)]
+    return cfg, farm.simulate(cfg, arr, specs)
+
+
+def _bin_ratio(tcfg):
+    return (tcfg.lat_hi / tcfg.lat_lo) ** (1.0 / tcfg.n_bins)
+
+
+def _assert_within_one_bin(approx, exact, tcfg):
+    r = _bin_ratio(tcfg)
+    assert exact / r <= approx <= exact * r, (approx, exact, r)
+
+
+def test_histogram_percentiles_match_oracle_mmk():
+    """Engine-accumulated histogram p50/p95/p99 within one (log) bin of the
+    exact percentiles over the same finished jobs."""
+    cfg, res = _mmk_run()
+    assert res.telemetry is not None
+    assert res.telemetry.jobs_binned == res.n_finished
+    for q, approx in [(50, res.telemetry.job_p50),
+                      (95, res.telemetry.job_p95),
+                      (99, res.telemetry.job_p99)]:
+        exact = float(np.percentile(res.latencies, q,
+                                    method="inverted_cdf"))
+        _assert_within_one_bin(approx, exact, cfg.telemetry)
+    # single-task jobs: task histogram == job histogram
+    assert res.telemetry.tasks_binned == res.telemetry.jobs_binned
+    _assert_within_one_bin(
+        res.telemetry.task_p95,
+        float(np.percentile(res.latencies, 95, method="inverted_cdf")),
+        cfg.telemetry)
+
+
+def test_pallas_kernel_percentiles_match_oracle_mmk():
+    """The same latencies pushed through the fused Pallas kernel
+    (interpret mode) recover oracle percentiles within one bin."""
+    cfg, res = _mmk_run()
+    tcfg = cfg.telemetry
+    lat = jnp.asarray(res.latencies, jnp.float32)
+    w = jnp.ones_like(lat)
+    B, K, W = tcfg.n_bins, telemetry.WIN_COLS, 4
+    jh, th, _ = telemetry_accum(
+        lat, w, lat, w, jnp.zeros((B,), jnp.float32),
+        jnp.zeros((B,), jnp.float32), jnp.zeros((W, K), jnp.float32),
+        jnp.asarray(0, jnp.int32), jnp.zeros((K,), jnp.float32),
+        tcfg.lat_lo, tcfg.lat_hi, interpret=True)
+    np.testing.assert_allclose(np.asarray(jh), np.asarray(th))
+    for q in (50, 95, 99):
+        approx = float(telemetry.hist_percentile(
+            np.asarray(jh), tcfg.lat_lo, tcfg.lat_hi, q))
+        _assert_within_one_bin(
+            approx,
+            float(np.percentile(res.latencies, q, method="inverted_cdf")),
+            tcfg)
+    # kernel histogram == engine (jnp path) histogram on identical inputs:
+    # engine bins (finish - arrival) in f32, res.latencies is that value
+    eng = ref.telemetry_accum_reference(
+        lat, w, lat, w, jnp.zeros((B,), jnp.float32),
+        jnp.zeros((B,), jnp.float32), jnp.zeros((W, K), jnp.float32),
+        jnp.asarray(0, jnp.int32), jnp.zeros((K,), jnp.float32),
+        tcfg.lat_lo, tcfg.lat_hi)[0]
+    np.testing.assert_allclose(np.asarray(jh), np.asarray(eng))
+
+
+def test_window_series_conservation():
+    """Windowed series integrate exactly: occupancy sums to sim time and
+    the power column integrates back to the accrued energy."""
+    cfg, res = _mmk_run()
+    ts = res.telemetry
+    assert ts.occupancy.sum() == pytest.approx(res.sim_time, rel=1e-5)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # no NaN-warnings allowed
+        joules = np.nansum(ts.server_power * ts.occupancy)
+    assert joules == pytest.approx(res.server_energy, rel=1e-4)
+    # state residency columns also integrate to N * sim_time
+    assert ts.state_residency.sum() == pytest.approx(
+        cfg.n_servers * res.sim_time, rel=1e-5)
+    # always-on farm: awake server average == N in every occupied window
+    occ = ts.occupancy > 0
+    np.testing.assert_allclose(ts.awake_servers[occ], cfg.n_servers,
+                               rtol=1e-5)
+
+
+def test_sla_and_tail_counters():
+    # generous SLA: no misses
+    _, res_ok = _mmk_run(sla=100.0)
+    assert res_ok.telemetry.sla_total == res_ok.n_finished
+    assert res_ok.telemetry.sla_miss == 0
+    # impossible SLA (below min service time): every job misses
+    _, res_bad = _mmk_run(sla=1e-7)
+    assert res_bad.telemetry.sla_miss == res_bad.n_finished
+    # tail threshold at 0.04s: matches the exact count
+    exact_tail = int((res_ok.latencies > TEL.tail_thresh).sum())
+    assert res_ok.telemetry.tail_violations == exact_tail
+    # no SLA at all -> nothing tracked
+    _, res_none = _mmk_run(sla=INF)
+    assert res_none.telemetry.sla_total == 0
+    assert res_none.telemetry.sla_miss_rate == 0.0
+
+
+def test_telemetry_disabled_path():
+    cfg, res = _mmk_run(tel=TelemetryConfig(enabled=False))
+    assert res.telemetry is None
+    assert res.n_finished == 400         # dynamics unaffected
+
+
+def test_replica_stats_from_device_histograms():
+    """run_replicas vmaps cleanly with Telemetry in state; per-replica
+    percentiles come from the (R, B) histograms within one bin of exact."""
+    cfg = SimConfig(n_servers=4, n_cores=2, local_q=64, max_jobs=128,
+                    tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=10_000, telemetry=TEL)
+    n_jobs, R = 80, 3
+    rng = np.random.default_rng(0)
+    specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+    arrs = np.stack([workload.poisson_arrivals(150.0, n_jobs, seed=s)
+                     for s in range(R)])
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs)
+    out = montecarlo.run_replicas(cfg, state_b, tc)
+    stats = montecarlo.replica_stats(out, cfg)
+    assert (stats["finished"] == n_jobs).all()
+    for r in range(R):
+        solo = farm.simulate(cfg, arrs[r], specs)
+        for q, key in [(50, "p50_latency"), (95, "p95_latency"),
+                       (99, "p99_latency")]:
+            _assert_within_one_bin(stats[key][r],
+                                   float(np.percentile(solo.latencies, q,
+                                                       method="inverted_cdf")),
+                                   cfg.telemetry)
+
+
+def test_replica_stats_empty_replica_no_warnings():
+    """A replica finishing zero jobs yields NaN stats without numpy
+    RuntimeWarnings (the montecarlo bugfix)."""
+    cfg = SimConfig(n_servers=2, n_cores=1, local_q=8, max_jobs=16,
+                    tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=1, telemetry=TEL)    # too few events to finish
+    n_jobs, R = 8, 2
+    rng = np.random.default_rng(0)
+    specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+    arrs = np.stack([workload.poisson_arrivals(50.0, n_jobs, seed=s)
+                     for s in range(R)])
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs)
+    out = montecarlo.run_replicas(cfg, state_b, tc)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        stats = montecarlo.replica_stats(out, cfg)
+    assert (stats["finished"] == 0).all()
+    assert np.isnan(stats["mean_latency"]).all()
+    assert np.isnan(stats["p99_latency"]).all()
+
+
+def test_summary_qos_and_ed_product():
+    cfg, res = _mmk_run()
+    ts = res.telemetry
+    # E·D: energy × histogram-mean latency; mean within a bin of exact
+    exact_mean = float(res.latencies.mean())
+    r = _bin_ratio(cfg.telemetry)
+    assert exact_mean / r <= ts.mean_latency <= exact_mean * r
+    total_e = res.server_energy + res.switch_energy
+    assert ts.energy_delay_product == pytest.approx(
+        total_e * ts.mean_latency, rel=1e-6)
+    assert ts.n_windows_used > 0

@@ -10,7 +10,14 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    # optional dev dependency (pyproject [dev]); without it the invariant
+    # sweep falls back to fixed parametrized examples
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core import farm as farm_mod
 from repro.core import workload
@@ -122,19 +129,9 @@ def test_mmpp_burstiness():
     assert cv(pois) == pytest.approx(1.0, abs=0.05)
 
 
-@settings(max_examples=12, deadline=None)
-@given(
-    n_servers=st.integers(1, 6),
-    n_cores=st.integers(1, 3),
-    n_jobs=st.integers(5, 40),
-    policy=st.sampled_from([SleepPolicy.ALWAYS_ON, SleepPolicy.SINGLE_TIMER]),
-    sched=st.sampled_from([SchedPolicy.LOAD_BALANCE, SchedPolicy.ROUND_ROBIN]),
-    tau=st.floats(0.01, 1.0),
-    seed=st.integers(0, 2**16),
-)
-def test_engine_invariants(n_servers, n_cores, n_jobs, policy, sched, tau,
-                           seed):
-    """Property test: for any small config, the engine terminates with all
+def _check_engine_invariants(n_servers, n_cores, n_jobs, policy, sched, tau,
+                             seed):
+    """Property check: for any small config, the engine terminates with all
     jobs finished, time/energy accounting consistent, and no NaNs."""
     cfg = SimConfig(n_servers=n_servers, n_cores=n_cores, local_q=64,
                     max_jobs=64, tasks_per_job=1, sched_policy=sched,
@@ -153,3 +150,35 @@ def test_engine_invariants(n_servers, n_cores, n_jobs, policy, sched, tau,
     # work conservation: busy core-seconds == sum of service requirements
     total_svc = sum(float(s.service[0]) for s in specs)
     assert res.busy_core_seconds == pytest.approx(total_svc, rel=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n_servers=st.integers(1, 6),
+        n_cores=st.integers(1, 3),
+        n_jobs=st.integers(5, 40),
+        policy=st.sampled_from([SleepPolicy.ALWAYS_ON,
+                                SleepPolicy.SINGLE_TIMER]),
+        sched=st.sampled_from([SchedPolicy.LOAD_BALANCE,
+                               SchedPolicy.ROUND_ROBIN]),
+        tau=st.floats(0.01, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_engine_invariants(n_servers, n_cores, n_jobs, policy, sched,
+                               tau, seed):
+        _check_engine_invariants(n_servers, n_cores, n_jobs, policy, sched,
+                                 tau, seed)
+else:
+    @pytest.mark.parametrize("n_servers,n_cores,n_jobs,policy,sched,tau,seed", [
+        (1, 1, 5, SleepPolicy.ALWAYS_ON, SchedPolicy.LOAD_BALANCE, 0.1, 0),
+        (4, 2, 40, SleepPolicy.SINGLE_TIMER, SchedPolicy.ROUND_ROBIN,
+         0.05, 7),
+        (6, 3, 25, SleepPolicy.SINGLE_TIMER, SchedPolicy.LOAD_BALANCE,
+         1.0, 42),
+        (3, 1, 12, SleepPolicy.ALWAYS_ON, SchedPolicy.ROUND_ROBIN, 0.5, 99),
+    ])
+    def test_engine_invariants(n_servers, n_cores, n_jobs, policy, sched,
+                               tau, seed):
+        _check_engine_invariants(n_servers, n_cores, n_jobs, policy, sched,
+                                 tau, seed)

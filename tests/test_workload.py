@@ -1,0 +1,66 @@
+"""Arrival-model sanity: empirical rates, monotonicity, and burstiness of
+the paper's three workload generators (core/workload.py §III-D)."""
+import numpy as np
+import pytest
+
+from repro.core import workload
+
+
+def _empirical_rate(ts):
+    return len(ts) / (ts[-1] - ts[0] + 1e-12)
+
+
+def test_poisson_rate_and_monotone():
+    lam, n = 100.0, 20_000
+    ts = workload.poisson_arrivals(lam, n, seed=0)
+    assert ts.shape == (n,)
+    assert (np.diff(ts) > 0).all()
+    assert _empirical_rate(ts) == pytest.approx(lam, rel=0.05)
+    # exponential gaps: CV ~ 1
+    gaps = np.diff(ts)
+    assert gaps.std() / gaps.mean() == pytest.approx(1.0, abs=0.1)
+
+
+def test_poisson_t0_offset():
+    ts = workload.poisson_arrivals(50.0, 100, seed=1, t0=10.0)
+    assert ts[0] > 10.0
+
+
+def test_mmpp2_rate_between_states_and_bursty():
+    lam_h, lam_l = 2000.0, 100.0
+    n = 30_000
+    ts = workload.mmpp2_arrivals(lam_h=lam_h, lam_l=lam_l, r_hl=2.0,
+                                 r_lh=1.0, n_jobs=n, seed=2)
+    assert (np.diff(ts) > 0).all()
+    rate = _empirical_rate(ts)
+    assert lam_l < rate < lam_h
+    # stationary mix: pi_H = r_lh/(r_lh+r_hl) = 1/3 of *time* in H
+    expect = (lam_h * 1.0 + lam_l * 2.0) / 3.0
+    assert rate == pytest.approx(expect, rel=0.15)
+    # modulation makes inter-arrivals over-dispersed vs Poisson (CV > 1)
+    gaps = np.diff(ts)
+    assert gaps.std() / gaps.mean() > 1.2
+
+
+def test_wiki_like_trace_rate_and_monotone():
+    mean_rate, n = 500.0, 40_000
+    ts = workload.wiki_like_trace(n, mean_rate, period=10.0, swing=0.6,
+                                  seed=3)
+    assert (np.diff(ts) > 0).all()
+    assert _empirical_rate(ts) == pytest.approx(mean_rate, rel=0.1)
+    # diurnal swing: rate in the peak half-period beats the trough
+    phase = (ts % 10.0) / 10.0
+    peak = ((phase > 0.0) & (phase < 0.5)).sum()      # sin > 0 half
+    trough = ((phase > 0.5) & (phase < 1.0)).sum()
+    assert peak > 1.2 * trough
+
+
+def test_trace_arrivals_sorted_truncated_rescaled():
+    raw = [3.0, 1.0, 2.0, 8.0]
+    ts = workload.trace_arrivals(raw, n_jobs=3, rate_scale=2.0)
+    np.testing.assert_allclose(ts, [0.5, 1.0, 1.5])
+
+
+def test_utilization_to_rate_roundtrip():
+    lam = workload.utilization_to_rate(0.5, 0.01, 10, 4)
+    assert lam == pytest.approx(0.5 / 0.01 * 40)
