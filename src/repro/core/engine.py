@@ -97,6 +97,29 @@ def next_event_time(state: SimState, cfg: SimConfig) -> jnp.ndarray:
 # event appliers
 # ==========================================================================
 
+def _rebuild_job_completion(jobs: JobTable, cfg: SimConfig, now):
+    """(tasks_done, job_finish) rebuilt from task statuses: DONE is
+    terminal (completions and drops both land there), so the per-job count
+    is a pure function of the current statuses.  Newly-complete jobs get
+    job_finish stamped at ``now``."""
+    T = cfg.tasks_per_job
+    tasks_done = ((jobs.status == TaskStatus.DONE)
+                  & jobs.valid).reshape(-1, T).sum(axis=1)
+    n_valid_tasks = jobs.valid.reshape(-1, T).sum(axis=1)
+    job_complete = (tasks_done >= n_valid_tasks) & (tasks_done > 0)
+    job_finish = jnp.where(job_complete & (jobs.job_finish >= INF),
+                           now, jobs.job_finish)
+    return tasks_done, job_finish
+
+
+def _promote_ready(jobs: JobTable, dep_count, cfg: SimConfig):
+    """BLOCKED -> READY where deps are now satisfied (arrived jobs only)."""
+    T = cfg.tasks_per_job
+    arrived = jnp.arange(jobs.status.shape[0]) // T < jobs.arr_ptr
+    ready = (jobs.status == TaskStatus.BLOCKED) & (dep_count <= 0) & arrived
+    return jnp.where(ready, TaskStatus.READY, jobs.status)
+
+
 def _apply_wakeups(farm: ServerFarm, cfg, now):
     done = (farm.srv_state == SrvState.WAKING) & (farm.srv_wake_at <= now)
     return replace(
@@ -109,105 +132,135 @@ def _apply_wakeups(farm: ServerFarm, cfg, now):
 def _apply_completions(state: SimState, cfg: SimConfig, tc=None):
     """Handle all cores whose busy_until <= now.  Marks tasks DONE, updates
     job bookkeeping, and resolves DAG edges (immediate dep decrement or
-    flow spawn)."""
+    flow spawn).
+
+    Task-level bookkeeping is pure elementwise task-space math: a RUNNING
+    task with task_end <= now is complete (task_end was stamped with its
+    core's busy_until at start), so no core->task scatter is needed.  Only
+    the DAG-edge resolution still walks the completed cores, and it is
+    statically absent for single-task jobs and runtime-gated on "any core
+    finished" otherwise."""
     farm, jobs, flows, net = state.farm, state.jobs, state.flows, state.net
     now = state.t
-    N, C = farm.core_busy_until.shape
     T = cfg.tasks_per_job
-    JT = jobs.status.shape[0]
     done_mask = farm.core_busy_until <= now                       # (N, C)
-    tid = jnp.where(done_mask, farm.core_task, -1)                # (N, C)
-    flat_tid = tid.reshape(-1)
-    valid = flat_tid >= 0
-    safe_tid = jnp.clip(flat_tid, 0)
-    # scatter index with out-of-bounds sentinel: clipping -1 to 0 would make
-    # every inactive core slot write a STALE value into task 0 (duplicate
-    # scatter .set is non-deterministic); mode="drop" discards them instead
-    sc_tid = jnp.where(valid, flat_tid, JT)
+    core_task = farm.core_task
 
-    # free the cores
+    # free the cores (elementwise)
     farm = replace(
         farm,
         core_busy_until=jnp.where(done_mask, INF, farm.core_busy_until),
         core_task=jnp.where(done_mask, -1, farm.core_task))
 
-    # mark DONE + record finish time
-    status = jobs.status.at[sc_tid].set(TaskStatus.DONE, mode="drop")
-    finish = jobs.finish.at[sc_tid].set(now, mode="drop")
+    # mark DONE + record finish time (elementwise in task space)
+    done_task = (jobs.status == TaskStatus.RUNNING) \
+        & (jobs.task_end <= now)
+    status = jnp.where(done_task, TaskStatus.DONE, jobs.status)
+    finish = jnp.where(done_task, now, jobs.finish)
+    jobs = replace(jobs, status=status, finish=finish)
+    tasks_done, job_finish = _rebuild_job_completion(jobs, cfg, now)
+    jobs = replace(jobs, tasks_done=tasks_done, job_finish=job_finish)
 
-    # per-job completion counters
-    tasks_done = jobs.tasks_done.at[safe_tid // T].add(
-        jnp.where(valid, 1, 0).astype(jnp.int32))
-    n_valid_tasks = jobs.valid.reshape(-1, T).sum(axis=1)
-    job_complete = (tasks_done >= n_valid_tasks) & (tasks_done > 0)
-    job_finish = jnp.where(job_complete & (jobs.job_finish >= INF),
-                           now, jobs.job_finish)
-
-    # DAG edges: children of completed tasks
-    ch = jobs.children[safe_tid]                                  # (NC, D)
-    eb = jobs.edge_bytes[safe_tid]
-    ch_valid = (ch >= 0) & valid[:, None] & ~jobs.edge_sent[safe_tid]
-    edge_sent = jobs.edge_sent.at[sc_tid].set(
-        jobs.edge_sent[safe_tid] | ch_valid, mode="drop")
-
-    dep_count = jobs.dep_count
-    if cfg.has_network:
-        # same-server or zero-byte edges resolve immediately; others spawn
-        # flows sequentially (bounded: N*C*D small in network configs)
-        src_srv = jobs.server[safe_tid]                           # (NC,)
-        dst_srv = jobs.server[jnp.clip(ch, 0)]                    # (NC, D)
-        needs_flow = ch_valid & (eb > 0) & (dst_srv != src_srv[:, None])
-        immediate = ch_valid & ~needs_flow
-        dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
-            -immediate.reshape(-1).astype(jnp.int32), mode="drop")
-
-        flat = needs_flow.reshape(-1)
-        f_src = jnp.broadcast_to(src_srv[:, None], ch.shape).reshape(-1)
-        f_dst = dst_srv.reshape(-1)
-        f_bytes = eb.reshape(-1)
-        f_child = ch.reshape(-1)
-
-        def spawn_one(i, carry):
-            flows, net = carry
-            def do(args):
-                flows, net = args
-                fl, nt, ok = net_mod.spawn_flow(
-                    flows, net, tc, cfg, f_src[i], f_dst[i],
-                    f_bytes[i], f_child[i], now)
-                return fl, nt
-            return jax.lax.cond(flat[i], do, lambda a: a, (flows, net))
-
-        flows, net = jax.lax.fori_loop(0, flat.shape[0], spawn_one,
-                                       (flows, net))
-    else:
-        dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
-            -ch_valid.reshape(-1).astype(jnp.int32), mode="drop")
-
-    # BLOCKED -> READY where deps are now satisfied (only arrived jobs)
-    arrived = jnp.arange(jobs.status.shape[0]) // T < jobs.arr_ptr
-    becomes_ready = (status == TaskStatus.BLOCKED) & (dep_count <= 0) \
-        & arrived
-    status = jnp.where(becomes_ready, TaskStatus.READY, status)
-
-    jobs = replace(jobs, status=status, finish=finish,
-                   tasks_done=tasks_done, job_finish=job_finish,
-                   dep_count=dep_count, edge_sent=edge_sent)
+    if T > 1:
+        jobs, flows, net = _resolve_done_edges(
+            jobs, flows, net, cfg, tc, done_mask, core_task, now)
     return replace(state, farm=farm, jobs=jobs, flows=flows, net=net)
+
+
+def _resolve_done_edges(jobs, flows, net, cfg, tc, done_mask, core_task,
+                        now):
+    """DAG edges of tasks completed this step: immediate dep decrement or
+    flow spawn, then BLOCKED -> READY.  Single-task jobs have no edges, so
+    this is only traced for T > 1 and only runs when a core finished."""
+    T = cfg.tasks_per_job
+    JT = jobs.status.shape[0]
+
+    def resolve(args):
+        jobs, flows, net = args
+        tid = jnp.where(done_mask, core_task, -1)                 # (N, C)
+        flat_tid = tid.reshape(-1)
+        valid = flat_tid >= 0
+        safe_tid = jnp.clip(flat_tid, 0)
+        # scatter index with out-of-bounds sentinel: clipping -1 to 0
+        # would make every inactive core slot write a STALE value into
+        # task 0 (duplicate scatter .set is non-deterministic);
+        # mode="drop" discards them instead
+        sc_tid = jnp.where(valid, flat_tid, JT)
+
+        ch = jobs.children[safe_tid]                              # (NC, D)
+        eb = jobs.edge_bytes[safe_tid]
+        ch_valid = (ch >= 0) & valid[:, None] & ~jobs.edge_sent[safe_tid]
+        edge_sent = jobs.edge_sent.at[sc_tid].set(
+            jobs.edge_sent[safe_tid] | ch_valid, mode="drop")
+
+        dep_count = jobs.dep_count
+        if cfg.has_network:
+            # same-server or zero-byte edges resolve immediately; others
+            # spawn flows parent_server -> child_server
+            src_srv = jobs.server[safe_tid]                       # (NC,)
+            dst_srv = jobs.server[jnp.clip(ch, 0)]                # (NC, D)
+            needs_flow = ch_valid & (eb > 0) & (dst_srv != src_srv[:, None])
+            immediate = ch_valid & ~needs_flow
+            dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
+                -immediate.reshape(-1).astype(jnp.int32), mode="drop")
+
+            flat = needs_flow.reshape(-1)
+            f_src = jnp.broadcast_to(src_srv[:, None], ch.shape).reshape(-1)
+            f_dst = dst_srv.reshape(-1)
+            f_bytes = eb.reshape(-1)
+            f_child = ch.reshape(-1)
+
+            if cfg.use_vectorized_hot_loop:
+                def spawn(args):
+                    flows, net = args
+                    flows, net, _ = net_mod.spawn_flows_many(
+                        flows, net, tc, cfg, flat, f_src, f_dst, f_bytes,
+                        f_child, now)
+                    return flows, net
+
+                # most steps spawn nothing — gate the dense pass
+                flows, net = jax.lax.cond(flat.any(), spawn, lambda a: a,
+                                          (flows, net))
+            else:
+                def spawn_one(i, carry):
+                    flows, net = carry
+
+                    def do(args):
+                        flows, net = args
+                        fl, nt, ok = net_mod.spawn_flow(
+                            flows, net, tc, cfg, f_src[i], f_dst[i],
+                            f_bytes[i], f_child[i], now)
+                        return fl, nt
+                    return jax.lax.cond(flat[i], do, lambda a: a,
+                                        (flows, net))
+
+                flows, net = jax.lax.fori_loop(0, flat.shape[0], spawn_one,
+                                               (flows, net))
+        else:
+            dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
+                -ch_valid.reshape(-1).astype(jnp.int32), mode="drop")
+
+        status = _promote_ready(jobs, dep_count, cfg)
+        jobs = replace(jobs, status=status, dep_count=dep_count,
+                       edge_sent=edge_sent)
+        return jobs, flows, net
+
+    return jax.lax.cond(done_mask.any(), resolve, lambda a: a,
+                        (jobs, flows, net))
 
 
 def _apply_flow_completions(state: SimState, cfg: SimConfig):
     flows, fin = net_mod.complete_flows(state.flows, state.t)
-    child = jnp.where(fin, flows.child, -1)
-    dep_count = state.jobs.dep_count.at[jnp.clip(child, 0)].add(
-        -fin.astype(jnp.int32), mode="drop")
-    T = cfg.tasks_per_job
-    arrived = jnp.arange(dep_count.shape[0]) // T < state.jobs.arr_ptr
-    ready = (state.jobs.status == TaskStatus.BLOCKED) & (dep_count <= 0) \
-        & arrived
-    status = jnp.where(ready, TaskStatus.READY, state.jobs.status)
-    return replace(state, flows=flows,
-                   jobs=replace(state.jobs, dep_count=dep_count,
-                                status=status))
+
+    def resolve(jobs):
+        child = jnp.where(fin, flows.child, -1)
+        dep_count = jobs.dep_count.at[jnp.clip(child, 0)].add(
+            -fin.astype(jnp.int32), mode="drop")
+        status = _promote_ready(jobs, dep_count, cfg)
+        return replace(jobs, dep_count=dep_count, status=status)
+
+    jobs = jax.lax.cond(fin.any(), resolve, lambda j: j, state.jobs)
+    return replace(state, flows=flows, jobs=jobs)
 
 
 def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
@@ -220,35 +273,50 @@ def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
     nxt = jobs.arrival[jnp.clip(j, 0, J - 1)]
     can = (j < J) & (nxt <= state.t) & (nxt < INF / 2)
 
+    def _net_cost():
+        if cfg.has_network and \
+                cfg.sched_policy == scheduler.SchedPolicy.NETWORK_AWARE:
+            # wake cost from the front-end (server 0) to each server; the
+            # net state does not change during a job's assignment, so one
+            # evaluation serves every task of the job
+            return jax.vmap(
+                lambda d: net_mod.route_wake_cost(
+                    tc, state.net, jnp.int32(0), d)
+            )(jnp.arange(cfg.n_servers))
+        return None
+
     def admit(args):
         jobs, farm, sched = args
         base = j * T
+        tids = base + jnp.arange(T)
+        is_valid = jobs.valid[tids]
 
-        def assign_one(i, carry):
-            jobs, farm, sched = carry
-            tid = base + i
-            is_valid = jobs.valid[tid]
-            net_cost = None
-            if cfg.has_network and \
-                    cfg.sched_policy == scheduler.SchedPolicy.NETWORK_AWARE:
-                # wake cost from the front-end (server 0) to each server
-                costs = jax.vmap(
-                    lambda d: net_mod.route_wake_cost(
-                        tc, state.net, jnp.int32(0), d)
-                )(jnp.arange(cfg.n_servers))
-                net_cost = costs
-            srv, rr = scheduler.pick_server(farm, cfg, sched, net_cost)
-            server_arr = jobs.server.at[tid].set(
-                jnp.where(is_valid, srv, jobs.server[tid]))
-            sched = replace(sched, rr_ptr=jnp.where(is_valid, rr,
-                                                    sched.rr_ptr))
-            return replace(jobs, server=server_arr), farm, sched
+        if cfg.use_vectorized_hot_loop:
+            # all T assignments in one shot (cumulative-offset round-robin
+            # / shared-snapshot argmin — scheduler.pick_servers_for_job)
+            srvs, rr_new = scheduler.pick_servers_for_job(
+                farm, cfg, sched, is_valid, _net_cost())
+            server_arr = jobs.server.at[tids].set(
+                jnp.where(is_valid, srvs, jobs.server[tids]))
+            jobs = replace(jobs, server=server_arr)
+            sched = replace(sched, rr_ptr=rr_new)
+        else:
+            net_cost = _net_cost()
 
-        jobs, farm, sched = jax.lax.fori_loop(
-            0, T, assign_one, (jobs, farm, sched))
+            def assign_one(i, carry):
+                jobs, sched = carry
+                tid = base + i
+                v = jobs.valid[tid]
+                srv, rr = scheduler.pick_server(farm, cfg, sched, net_cost)
+                server_arr = jobs.server.at[tid].set(
+                    jnp.where(v, srv, jobs.server[tid]))
+                sched = replace(sched,
+                                rr_ptr=jnp.where(v, rr, sched.rr_ptr))
+                return replace(jobs, server=server_arr), sched
+
+            jobs, sched = jax.lax.fori_loop(0, T, assign_one, (jobs, sched))
 
         # roots -> READY
-        tids = base + jnp.arange(T)
         root = jobs.valid[tids] & (jobs.dep_count[tids] <= 0)
         status = jobs.status.at[tids].set(
             jnp.where(root, TaskStatus.READY, jobs.status[tids]))
@@ -260,8 +328,90 @@ def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
     return replace(state, jobs=jobs, farm=farm, sched=sched)
 
 
+def _resolve_drops(state: SimState, cfg: SimConfig, dropped):
+    """Complete the bookkeeping for tasks dropped by a full queue
+    (dropped (JT,) bool, already marked DONE by the drain).
+
+    Without this, a drop deadlocks DAG workloads: the task is DONE but its
+    children's dep_count never reaches zero, so they stay BLOCKED forever
+    and the sim spins to max_events.  A dropped task counts toward job
+    completion (finish/job_finish stamped at drop time, flagged via
+    farm.dropped) and resolves its DAG edges immediately — it never ran,
+    so there are no results to ship and no flows to spawn.
+
+    Gated on dropped.any(): overflow is the exception, and the healthy
+    path must not pay the bookkeeping every step.
+    """
+    now = state.t
+
+    def resolve(jobs):
+        finish = jnp.where(dropped, now, jobs.finish)
+        # drops were already marked DONE by the drain
+        tasks_done, job_finish = _rebuild_job_completion(jobs, cfg, now)
+
+        ch = jobs.children                           # (JT, D)
+        ch_valid = (ch >= 0) & dropped[:, None] & ~jobs.edge_sent
+        edge_sent = jobs.edge_sent | ch_valid
+        dep_count = jobs.dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
+            -ch_valid.reshape(-1).astype(jnp.int32), mode="drop")
+
+        status = _promote_ready(jobs, dep_count, cfg)
+        return replace(jobs, status=status, finish=finish,
+                       tasks_done=tasks_done, job_finish=job_finish,
+                       dep_count=dep_count, edge_sent=edge_sent)
+
+    jobs = jax.lax.cond(dropped.any(), resolve, lambda j: j, state.jobs)
+    return replace(state, jobs=jobs)
+
+
 def _drain_ready(state: SimState, cfg: SimConfig):
-    """Enqueue up to cfg.ready_per_step READY tasks at their servers."""
+    """Enqueue up to cfg.ready_per_step READY tasks at their servers
+    (first K in task-id order).  Queue-full drops are resolved afterwards
+    (_resolve_drops); their newly-READY children drain on the next step —
+    still at the same simulation time, since READY tasks pin t_next to t."""
+    if cfg.use_vectorized_hot_loop:
+        return _drain_ready_batched(state, cfg)
+    return _drain_ready_scalar(state, cfg)
+
+
+def _drain_ready_batched(state: SimState, cfg: SimConfig):
+    """One multi-push: rank the first K READY tasks per destination server
+    and write them into ring-queue slots with a single scatter.  The whole
+    pass is gated on "any READY task" so quiet steps stay free."""
+    is_ready = state.jobs.status == TaskStatus.READY
+
+    def drain(state):
+        jobs, farm = state.jobs, state.farm
+        K = cfg.ready_per_step
+        JT = jobs.status.shape[0]
+        r = jnp.cumsum(is_ready) - 1                # rank among READY
+        sel = is_ready & (r < K)
+        # gather selected tids into (K,) batch slots, ascending tid order
+        tids = jnp.full((K,), -1, jnp.int32).at[jnp.where(sel, r, K)].set(
+            jnp.arange(JT, dtype=jnp.int32), mode="drop")
+        valid = tids >= 0
+        srv = jnp.where(valid, jobs.server[jnp.clip(tids, 0)], -1)
+
+        farm, ok = server.queue_push_many(farm, cfg, srv, tids, valid)
+        dest = jnp.zeros((cfg.n_servers,), bool).at[
+            jnp.where(valid, srv, cfg.n_servers)].set(True, mode="drop")
+        farm = server.begin_wake_mask(farm, cfg, dest, state.t)
+
+        sc = jnp.where(valid, tids, JT)
+        status = jobs.status.at[sc].set(
+            jnp.where(ok, TaskStatus.QUEUED, TaskStatus.DONE), mode="drop")
+        state = replace(state, jobs=replace(jobs, status=status), farm=farm)
+        dropped = jnp.zeros((JT,), bool).at[
+            jnp.where(valid & ~ok, tids, JT)].set(True, mode="drop")
+        return _resolve_drops(state, cfg, dropped)
+
+    return jax.lax.cond(is_ready.any(), drain, lambda s: s, state)
+
+
+def _drain_ready_scalar(state: SimState, cfg: SimConfig):
+    """Seed reference path: K sequential scalar queue_push + begin_wake."""
+    status_before = state.jobs.status
+
     def one(_, st):
         jobs, farm = st.jobs, st.farm
         is_ready = jobs.status == TaskStatus.READY
@@ -275,13 +425,16 @@ def _drain_ready(state: SimState, cfg: SimConfig):
             farm2 = server.begin_wake(farm2, cfg, srv, st.t)
             status = jobs.status.at[tid].set(
                 jnp.where(ok, TaskStatus.QUEUED, TaskStatus.DONE))
-            # a dropped task counts as finished-with-drop (stat recorded)
             jobs2 = replace(jobs, status=status)
             return replace(st, jobs=jobs2, farm=farm2)
 
         return jax.lax.cond(any_ready, do, lambda s: s, st)
 
-    return jax.lax.fori_loop(0, cfg.ready_per_step, one, state)
+    state = jax.lax.fori_loop(0, cfg.ready_per_step, one, state)
+    # READY -> DONE transitions during the loop are exactly the drops
+    dropped = (status_before == TaskStatus.READY) \
+        & (state.jobs.status == TaskStatus.DONE)
+    return _resolve_drops(state, cfg, dropped)
 
 
 def _start_tasks(state: SimState, cfg: SimConfig):
@@ -290,8 +443,16 @@ def _start_tasks(state: SimState, cfg: SimConfig):
     sid = started.reshape(-1)
     JT = state.jobs.status.shape[0]
     sc = jnp.where(sid >= 0, sid, JT)          # drop-sentinel (see above)
-    status = state.jobs.status.at[sc].set(TaskStatus.RUNNING, mode="drop")
-    return replace(state, farm=farm, jobs=replace(state.jobs, status=status))
+
+    def stamp(jobs):
+        status = jobs.status.at[sc].set(TaskStatus.RUNNING, mode="drop")
+        # stamp the core's busy_until so completion resolves elementwise
+        task_end = jobs.task_end.at[sc].set(
+            farm.core_busy_until.reshape(-1), mode="drop")
+        return replace(jobs, status=status, task_end=task_end)
+
+    jobs = jax.lax.cond((sid >= 0).any(), stamp, lambda j: j, state.jobs)
+    return replace(state, farm=farm, jobs=jobs)
 
 
 # ==========================================================================
@@ -342,8 +503,15 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     state = replace(state, farm=farm, sched=sched)
 
     if cfg.has_network:
-        flows, link_flows = net_mod.recompute_rates(state.flows, tc,
-                                                    state.t)
+        # rate recomputation is only needed while flows are in flight —
+        # gate the (F, H) pass.  The no-flow branch must still ZERO
+        # link_flows (recompute_rates would): reusing last step's counts
+        # would pin ports ACTIVE forever after the final flow completes.
+        flows, link_flows = jax.lax.cond(
+            state.flows.active.any(),
+            lambda args: net_mod.recompute_rates(args[0], tc, state.t),
+            lambda args: (args[0], jnp.zeros_like(args[1])),
+            (state.flows, state.net.link_flows))
         net = net_mod.update_switch_states(state.net, link_flows, tc,
                                            cfg, state.t)
         state = replace(state, flows=flows, net=net)
@@ -362,6 +530,10 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
 
 
 def init_state(cfg: SimConfig, jobs: JobTable, topo=None) -> SimState:
+    if cfg.has_network and topo is None:
+        raise ValueError(
+            "cfg.has_network=True requires a topology: pass topo= "
+            "(flows would silently never route with tc=None)")
     tc = net_mod.topo_consts(topo) if (topo is not None and
                                        cfg.has_network) else None
     n_sw = topo.n_switches if topo is not None else 0

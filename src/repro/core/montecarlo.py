@@ -21,13 +21,16 @@ from . import engine, jobs as jobs_mod, telemetry
 from .types import INF, SimConfig
 
 
-def batched_state(cfg: SimConfig, arrivals_b, specs, taus=None):
-    """Build R replica states.  arrivals_b (R, J); taus (R,) or (R, N)."""
+def batched_state(cfg: SimConfig, arrivals_b, specs, taus=None, topo=None):
+    """Build R replica states.  arrivals_b (R, J); taus (R,) or (R, N);
+    topo — network topology, required for has_network configs (threaded to
+    engine.init_state so replica sweeps get real TopoConsts, not tc=None)."""
     R = arrivals_b.shape[0]
     tables = [jobs_mod.build_jobs(cfg, arrivals_b[i], specs)
               for i in range(R)]
     jobs = jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
-    state0, tc = engine.init_state(cfg, jax.tree.map(lambda a: a[0], jobs))
+    state0, tc = engine.init_state(cfg, jax.tree.map(lambda a: a[0], jobs),
+                                   topo)
     state_b = jax.vmap(lambda j: dataclasses.replace(state0, jobs=j))(jobs)
     if taus is not None:
         taus = jnp.asarray(taus, cfg.time_dtype)

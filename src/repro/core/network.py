@@ -23,9 +23,9 @@ import numpy as np
 from .types import (INF, FlowTable, LinecardState, NetState, PortState,
                     SimConfig, replace)
 
-__all__ = ["TopoConsts", "topo_consts", "spawn_flow", "advance_flows",
-           "recompute_rates", "complete_flows", "update_switch_states",
-           "route_wake_cost"]
+__all__ = ["TopoConsts", "topo_consts", "spawn_flow", "spawn_flows_many",
+           "advance_flows", "recompute_rates", "complete_flows",
+           "update_switch_states", "route_wake_cost"]
 
 
 class TopoConsts:
@@ -135,6 +135,89 @@ def spawn_flow(flows: FlowTable, net: NetState, tc: TopoConsts,
     )
     net = replace(net, sw_awake=sw_awake)
     return flows, net, ok
+
+
+def spawn_flows_many(flows: FlowTable, net: NetState, tc: TopoConsts,
+                     cfg: SimConfig, need, src, dst, nbytes, child, now):
+    """Spawn flows for every edge with need[e]=True in ONE batched update —
+    the vectorized replacement for E sequential spawn_flow calls.
+
+    Slot allocation is a prefix sum over free flow slots (edge e in
+    need-order k takes the k-th free slot; edges past the free count fail,
+    exactly like sequential first-free allocation).  Switch-wake charging
+    preserves the sequential order semantics: a sleeping switch's
+    t_switch_wake is only paid by the FIRST needed edge whose route touches
+    it — later edges in the same batch see it already awake.
+
+    need/src/dst/nbytes/child (E,).  Returns (flows, net, ok (E,) bool).
+    """
+    E = need.shape[0]
+    F = flows.active.shape[0]
+    W = net.sw_awake.shape[0]
+    swp = cfg.switch_power
+    order = jnp.cumsum(need) - 1                  # rank among needed edges
+    srcc, dstc = jnp.clip(src, 0), jnp.clip(dst, 0)
+
+    # first needed edge (in order) whose route touches each switch
+    sws = tc.route_sw[srcc, dstc]                             # (E, Hs)
+    touch = (sws >= 0) & need[:, None]
+    first = jnp.full((W,), E, jnp.int32).at[
+        jnp.where(touch, sws, W)].min(
+        jnp.broadcast_to(jnp.where(need, order, E)[:, None], sws.shape),
+        mode="drop")
+
+    links = tc.routes[srcc, dstc]                             # (E, H)
+    lmask = links >= 0
+    lc = jnp.clip(links, 0)
+    sw_a, sw_b = tc.link_sw[lc, 0], tc.link_sw[lc, 1]         # (E, H)
+    pt_a = jnp.clip(tc.link_port[lc, 0], 0)
+    port_lpi = (net.port_state[jnp.clip(sw_a, 0), pt_a] == PortState.LPI) \
+        & (sw_a >= 0)
+    sleeping0 = ~net.sw_awake
+
+    def asleep_at_turn(sw):
+        # sleeping when this edge spawns = initially sleeping AND not yet
+        # woken by an earlier edge in the batch
+        s0 = jnp.where(sw >= 0, sleeping0[jnp.clip(sw, 0)], False)
+        return s0 & (first[jnp.clip(sw, 0)] >= order[:, None])
+
+    asleep = asleep_at_turn(sw_a) | asleep_at_turn(sw_b)
+    n_sleep_sw = jnp.sum(jnp.where(lmask, asleep, False), axis=1)
+    n_lpi = jnp.sum(jnp.where(lmask, port_lpi, False), axis=1)
+    hops = tc.route_len[srcc, dstc].astype(jnp.float32)
+    extra = (n_lpi * swp.t_lpi_wake
+             + jnp.minimum(n_sleep_sw, 1) * swp.t_switch_wake)
+    if cfg.comm_model == 1:  # packet store-and-forward serialization
+        cap0 = tc.link_cap[jnp.clip(links[:, 0], 0)]
+        extra = extra + hops * cfg.hop_latency + \
+            jnp.maximum(hops - 1.0, 0.0) * cfg.flow_mtu / cap0
+
+    # prefix-sum slot allocator over free flow slots
+    free = ~flows.active
+    free_rank = jnp.cumsum(free) - 1
+    slot_by_rank = jnp.full((F,), F, jnp.int32).at[
+        jnp.where(free, free_rank, F)].set(
+        jnp.arange(F, dtype=jnp.int32), mode="drop")
+    ok = need & (order < free.sum())
+    slot = jnp.where(ok, slot_by_rank[jnp.clip(order, 0, F - 1)], F)
+
+    flows = FlowTable(
+        src=flows.src.at[slot].set(src.astype(jnp.int32), mode="drop"),
+        dst=flows.dst.at[slot].set(dst.astype(jnp.int32), mode="drop"),
+        rem=flows.rem.at[slot].set(nbytes.astype(jnp.float32), mode="drop"),
+        rate=flows.rate.at[slot].set(0.0, mode="drop"),
+        extra=flows.extra.at[slot].set(extra.astype(flows.extra.dtype),
+                                       mode="drop"),
+        done_at=flows.done_at.at[slot].set(
+            jnp.asarray(INF, flows.done_at.dtype), mode="drop"),
+        child=flows.child.at[slot].set(child.astype(jnp.int32), mode="drop"),
+        active=flows.active.at[slot].set(True, mode="drop"),
+    )
+    # wake every switch on every needed route (even slot-exhausted spawns,
+    # matching the sequential path which wakes before checking ok)
+    sw_awake = net.sw_awake.at[jnp.where(touch, sws, W)].set(True,
+                                                             mode="drop")
+    return flows, replace(net, sw_awake=sw_awake), ok
 
 
 def recompute_rates(flows: FlowTable, tc: TopoConsts, now):

@@ -40,11 +40,17 @@ def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None):
     full = farm.q_len >= cfg.local_q
 
     if cfg.sched_policy == SchedPolicy.ROUND_ROBIN:
-        # first enabled, non-full server at/after rr_ptr
+        # first enabled, non-full server at/after rr_ptr; when every
+        # enabled server is full, fall back to the least-loaded enabled
+        # one.  Assignment happens at ARRIVAL but the push happens later,
+        # at READY drain — the least-loaded queue is the one most likely
+        # to have drained below capacity by then, whereas the seed's
+        # argmax(ok)=0 pushed at rr_ptr regardless of load
         idx = (sched.rr_ptr + jnp.arange(N)) % N
         ok = enabled[idx] & ~full[idx]
         off = jnp.argmax(ok)                      # first True
-        srv = idx[off]
+        fb = jnp.argmin(jnp.where(enabled, load, jnp.float32(2 * BIG)))
+        srv = jnp.where(ok.any(), idx[off], fb).astype(jnp.int32)
         return srv, (srv + 1) % N
 
     score = load
@@ -61,6 +67,45 @@ def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None):
 
     score = jnp.where(enabled & ~full, score, jnp.float32(2 * BIG))
     return jnp.argmin(score).astype(jnp.int32), sched.rr_ptr
+
+
+def pick_servers_for_job(farm: ServerFarm, cfg: SimConfig, sched, valid,
+                         net_cost=None):
+    """Assign servers to ALL tasks of one job in one shot (T picks).
+
+    Equivalent to T sequential pick_server calls against the same farm
+    snapshot (the farm does not change during a job's assignment — tasks
+    enqueue later, at READY drain).  For the score policies every pick is
+    therefore the same argmin; ROUND_ROBIN walks the cyclically-ordered
+    enabled & non-full servers via rank matching instead of a fori_loop.
+
+    valid (T,) bool — padding tasks get a pick too but callers must not
+    commit them (matching the scalar loop, which gates commits on valid).
+    Returns (servers (T,) int32, new_rr_ptr).
+    """
+    N, T = cfg.n_servers, valid.shape[0]
+
+    if cfg.sched_policy != SchedPolicy.ROUND_ROBIN:
+        srv, _ = pick_server(farm, cfg, sched, net_cost)
+        return jnp.broadcast_to(srv, (T,)), sched.rr_ptr
+
+    load = server_load(farm, cfg).astype(jnp.float32)
+    enabled = farm.srv_enabled
+    full = farm.q_len >= cfg.local_q
+    idx = (sched.rr_ptr + jnp.arange(N)) % N      # cyclic order from rr_ptr
+    ok = enabled[idx] & ~full[idx]
+    n_ok = ok.sum()
+    rank = jnp.cumsum(ok) - 1                     # rank of each ok server
+    vi = jnp.cumsum(valid) - 1                    # pick index per valid task
+    want = vi % jnp.maximum(n_ok, 1)
+    match = ok[None, :] & (rank[None, :] == want[:, None])        # (T, N)
+    srv = idx[jnp.argmax(match, axis=1)]
+    fb = jnp.argmin(jnp.where(enabled, load, jnp.float32(2 * BIG)))
+    srv = jnp.where(n_ok > 0, srv, fb).astype(jnp.int32)
+    last = srv[jnp.argmax(jnp.where(valid, vi, -1))]
+    rr_new = jnp.where(valid.any(), (last + 1) % N,
+                       sched.rr_ptr).astype(jnp.int32)
+    return srv, rr_new
 
 
 def provisioning_adjust(farm: ServerFarm, cfg: SimConfig, sched,

@@ -11,8 +11,8 @@ import jax.numpy as jnp
 
 from .types import INF, CoreState, ServerFarm, SimConfig, SrvState, replace
 
-__all__ = ["queue_push", "try_start", "wake_latency", "begin_wake",
-           "refresh_idle_state"]
+__all__ = ["queue_push", "queue_push_many", "try_start", "wake_latency",
+           "begin_wake", "begin_wake_mask", "refresh_idle_state"]
 
 
 def queue_push(farm: ServerFarm, cfg: SimConfig, server, tid):
@@ -26,6 +26,32 @@ def queue_push(farm: ServerFarm, cfg: SimConfig, server, tid):
     q_len = farm.q_len.at[server].add(jnp.where(full, 0, 1))
     dropped = farm.dropped + jnp.where(full, 1, 0).astype(jnp.int32)
     return replace(farm, q_tasks=q_tasks, q_len=q_len, dropped=dropped), ~full
+
+
+def queue_push_many(farm: ServerFarm, cfg: SimConfig, servers, tids, valid):
+    """Push up to K tasks onto their servers' ring queues in one scatter.
+
+    servers/tids (K,) int32, valid (K,) bool.  Tasks destined to the same
+    server land in q slots in position order (matching K sequential
+    queue_push calls); once a queue fills, later same-server tasks drop.
+    Returns (farm, ok (K,) bool).
+    """
+    K = tids.shape[0]
+    N, Q = cfg.n_servers, cfg.local_q
+    s = jnp.clip(servers, 0)
+    # rank among earlier valid tasks bound for the same server
+    pos = jnp.arange(K)
+    same = valid[None, :] & valid[:, None] & (s[None, :] == s[:, None])
+    rank = jnp.sum(same & (pos[None, :] < pos[:, None]), axis=1)
+    # sequential equivalence: drops only start once the queue is full, so
+    # accepted ranks are contiguous and slots need no compaction
+    ok = valid & (farm.q_len[s] + rank < Q)
+    slot = (farm.q_head[s] + farm.q_len[s] + rank) % Q
+    row = jnp.where(ok, s, N)                       # drop-sentinel row
+    q_tasks = farm.q_tasks.at[row, slot].set(tids, mode="drop")
+    q_len = farm.q_len.at[row].add(1, mode="drop")
+    dropped = farm.dropped + (valid & ~ok).sum().astype(jnp.int32)
+    return replace(farm, q_tasks=q_tasks, q_len=q_len, dropped=dropped), ok
 
 
 def wake_latency(cfg: SimConfig, state):
@@ -50,43 +76,49 @@ def begin_wake(farm: ServerFarm, cfg: SimConfig, server, now):
                    wake_count=wake_count)
 
 
-def _pop_one(farm: ServerFarm, cfg: SimConfig, service, now):
-    """One vectorized round: every awake server with a free core and a
-    non-empty queue starts its queue-head task.  Called C times (statically
-    unrolled) from try_start, so a server can fill all cores in one step."""
-    N, C, Q = cfg.n_servers, cfg.n_cores, cfg.local_q
-    awake = (farm.srv_state == SrvState.ACTIVE) | (farm.srv_state == SrvState.IDLE)
-    free_core = farm.core_busy_until >= INF                     # (N, C)
-    has_free = free_core.any(axis=1)
-    # first free core per server
-    core_idx = jnp.argmax(free_core, axis=1)                    # (N,)
-    can = awake & has_free & (farm.q_len > 0)                   # (N,)
-
-    head_tid = farm.q_tasks[jnp.arange(N), farm.q_head % Q]     # (N,)
-    svc = service[jnp.clip(head_tid, 0)] / cfg.core_freq
-    busy_until = now + svc.astype(farm.core_busy_until.dtype)
-
-    rows = jnp.arange(N)
-    new_busy = farm.core_busy_until.at[rows, core_idx].set(
-        jnp.where(can, busy_until, farm.core_busy_until[rows, core_idx]))
-    new_task = farm.core_task.at[rows, core_idx].set(
-        jnp.where(can, head_tid, farm.core_task[rows, core_idx]))
-    q_head = jnp.where(can, (farm.q_head + 1) % Q, farm.q_head)
-    q_len = jnp.where(can, farm.q_len - 1, farm.q_len)
-    started = jnp.where(can, head_tid, -1)                      # (N,)
-    farm = replace(farm, core_busy_until=new_busy, core_task=new_task,
-                   q_head=q_head, q_len=q_len)
-    return farm, started
+def begin_wake_mask(farm: ServerFarm, cfg: SimConfig, mask, now):
+    """Masked whole-farm begin_wake: start waking every sleeping server in
+    ``mask`` (N,).  Idempotent like the scalar version."""
+    st = farm.srv_state
+    sleeping = mask & ((st == SrvState.PKG_C6) | (st == SrvState.S3)
+                       | (st == SrvState.OFF))
+    lat = wake_latency(cfg, st)
+    return replace(
+        farm,
+        srv_state=jnp.where(sleeping, SrvState.WAKING, st),
+        srv_wake_at=jnp.where(sleeping, now + lat, farm.srv_wake_at),
+        wake_count=farm.wake_count + sleeping.astype(jnp.int32))
 
 
 def try_start(farm: ServerFarm, cfg: SimConfig, service, now):
-    """Start as many queued tasks as there are free cores.  Returns
-    (farm, started_tids (C, N)) so the engine can flip task statuses."""
-    started = []
-    for _ in range(cfg.n_cores):
-        farm, s = _pop_one(farm, cfg, service, now)
-        started.append(s)
-    return farm, jnp.stack(started)
+    """Start as many queued tasks as there are free cores, in ONE masked
+    pass: the r-th free core of each awake server takes the r-th queue
+    entry, for r < min(free cores, queue length).  Identical to the seed's
+    C sequential pop rounds but with zero scatters — the core arrays are
+    rebuilt with elementwise where (XLA:CPU scatters serialize).
+
+    Returns (farm, started_tids (N, C), -1 where no start) so the engine
+    can flip task statuses."""
+    N, C, Q = cfg.n_servers, cfg.n_cores, cfg.local_q
+    awake = (farm.srv_state == SrvState.ACTIVE) \
+        | (farm.srv_state == SrvState.IDLE)
+    free = farm.core_busy_until >= INF                          # (N, C)
+    fr = jnp.cumsum(free, axis=1) - 1                           # free rank
+    n_start = jnp.where(awake,
+                        jnp.minimum(free.sum(axis=1), farm.q_len), 0)
+    start = free & (fr < n_start[:, None])                      # (N, C)
+    qpos = (farm.q_head[:, None] + fr) % Q                      # (N, C)
+    tid = jnp.take_along_axis(farm.q_tasks, qpos, axis=1)       # (N, C)
+    svc = service[jnp.clip(tid, 0)] / cfg.core_freq
+    busy_until = now + svc.astype(farm.core_busy_until.dtype)
+
+    farm = replace(
+        farm,
+        core_busy_until=jnp.where(start, busy_until, farm.core_busy_until),
+        core_task=jnp.where(start, tid, farm.core_task),
+        q_head=(farm.q_head + n_start) % Q,
+        q_len=farm.q_len - n_start)
+    return farm, jnp.where(start, tid, -1)
 
 
 def refresh_idle_state(farm: ServerFarm, cfg: SimConfig, now):

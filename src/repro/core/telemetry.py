@@ -128,18 +128,29 @@ def accumulate(telem: Telemetry, cfg: SimConfig, jobs, old_job_finish,
     tot = (new_job & has_sla).sum().astype(jnp.int32)
     tail = (new_job & (job_lat > tcfg.tail_thresh)).sum().astype(jnp.int32)
 
-    if tcfg.use_kernel:
-        from ..kernels import telemetry_bin
-        interp = jax.default_backend() != "tpu"
-        jh, th, win = telemetry_bin.telemetry_accum(
-            job_lat, jw, task_lat, tw, telem.job_hist, telem.task_hist,
-            telem.win, widx, wvals, tcfg.lat_lo, tcfg.lat_hi,
-            interpret=interp)
-    else:
+    def bin_and_bucket(args):
+        jh0, th0, win0 = args
+        if tcfg.use_kernel:
+            from ..kernels import telemetry_bin
+            interp = jax.default_backend() != "tpu"
+            return telemetry_bin.telemetry_accum(
+                job_lat, jw, task_lat, tw, jh0, th0, win0, widx, wvals,
+                tcfg.lat_lo, tcfg.lat_hi, interpret=interp)
         from ..kernels import ref
-        jh, th, win = ref.telemetry_accum_reference(
-            job_lat, jw, task_lat, tw, telem.job_hist, telem.task_hist,
-            telem.win, widx, wvals, tcfg.lat_lo, tcfg.lat_hi)
+        return ref.telemetry_accum_reference(
+            job_lat, jw, task_lat, tw, jh0, th0, win0, widx, wvals,
+            tcfg.lat_lo, tcfg.lat_hi)
+
+    def bucket_only(args):
+        # no completions this step: the histograms are untouched and only
+        # the (1-row) window bucket accrues — skip the (J,)/(J*T,)-row
+        # histogram scatters that dominate quiet steps
+        jh0, th0, win0 = args
+        return jh0, th0, win0.at[widx].add(wvals)
+
+    jh, th, win = jax.lax.cond(
+        new_job.any() | new_task.any(), bin_and_bucket, bucket_only,
+        (telem.job_hist, telem.task_hist, telem.win))
 
     return replace(telem, job_hist=jh, task_hist=th, win=win,
                    sla_miss=telem.sla_miss + miss,

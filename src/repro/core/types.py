@@ -192,6 +192,10 @@ class SimConfig:
     max_flows: int = 256            # concurrent network flows
     max_events: int = 50_000        # scan iteration budget
     ready_per_step: int = 8         # bounded ready->enqueue work per step
+    # hot-loop implementation: dense masked batch updates for drain /
+    # arrival-assignment / flow-spawn (True) vs the seed scalar fori_loops
+    # (False, kept as the semantic reference — tests compare both)
+    use_vectorized_hot_loop: bool = True
     # policies
     sched_policy: int = SchedPolicy.LOAD_BALANCE
     sleep_policy: int = SleepPolicy.ALWAYS_ON
@@ -262,6 +266,9 @@ class JobTable:
     status: jnp.ndarray             # (J*T,) TaskStatus
     edge_sent: jnp.ndarray          # (J*T, Dmax) network edge already handled
     server: jnp.ndarray             # (J*T,) assigned server (-1 unassigned)
+    task_end: jnp.ndarray           # (J*T,) busy_until stamped at start (INF
+                                    # otherwise) — lets completions resolve
+                                    # elementwise in task space, no scatter
     finish: jnp.ndarray             # (J*T,) task finish time
     job_finish: jnp.ndarray         # (J,) completion time (INF if not done)
     tasks_done: jnp.ndarray         # (J,) per-job finished-task count

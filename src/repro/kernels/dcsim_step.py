@@ -8,6 +8,10 @@ energy accrual, once for the completion update.  This kernel fuses the
   per server block (block_n, C):
     busy count -> piecewise power -> energy += P·dt, busy_seconds += busy·dt
     completions (busy_until <= t_next) freed to INF, mask emitted
+    next-event candidate: min over the block of surviving busy_until,
+    pending wake completions, and idle delay-timer expiries — the farm's
+    contribution to the NEXT next_event_time, so the following iteration's
+    min-reduction needs no extra pass over the farm arrays
 
 It is the TPU analogue of the paper's event-queue pop + clock advance —
 O(state) streaming with everything fused at VPU width, instead of a heap's
@@ -30,7 +34,8 @@ INF = 1.0e30
 
 
 def _kernel(t_ref, tn_ref, busy_ref, state_ref, energy_ref, bsec_ref,
-            ptab_ref, new_busy_ref, done_ref, new_energy_ref, new_bsec_ref,
+            wake_ref, isince_ref, tau_ref, ptab_ref,
+            new_busy_ref, done_ref, new_energy_ref, new_bsec_ref, next_ref,
             *, p_core_active, p_core_idle, n_cores):
     dt = (tn_ref[0] - t_ref[0]).astype(jnp.float32)
     cb = busy_ref[...]                                    # (bn, C)
@@ -45,19 +50,36 @@ def _kernel(t_ref, tn_ref, busy_ref, state_ref, energy_ref, bsec_ref,
     new_bsec_ref[...] = bsec_ref[...] + busy * dt
     done = cb <= tn_ref[0]
     done_ref[...] = done.astype(jnp.int8)
-    new_busy_ref[...] = jnp.where(done, INF, cb)
+    new_busy = jnp.where(done, INF, cb)
+    new_busy_ref[...] = new_busy
+    # farm candidates for the next event: surviving completions, pending
+    # wakeups, and delay-timer expiries of IDLE (state==1) servers
+    timer = jnp.where(st == 1, isince_ref[...] + tau_ref[...], INF)
+    cand = jnp.minimum(new_busy.min(axis=1),
+                       jnp.minimum(wake_ref[...], timer))
+    next_ref[0] = cand.min()
 
 
 def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
-                  state_power, p_core_active, p_core_idle, *,
+                  state_power, p_core_active, p_core_idle,
+                  srv_wake_at=None, srv_idle_since=None, srv_tau=None, *,
                   block_n=256, interpret=False):
     """Fused farm advance.  core_busy (N, C) f32; srv_state (N,) int32;
-    energy/busy_seconds (N,) f32; t/t_next scalars; state_power
-    (SrvState.NUM,) f32 table (index 0 = base power of an awake server).
+    energy/busy_seconds/srv_wake_at/srv_idle_since/srv_tau (N,) f32;
+    t/t_next scalars; state_power (SrvState.NUM,) f32 table (index 0 =
+    base power of an awake server).
 
-    Returns (new_core_busy, done_mask (N, C) bool, energy, busy_seconds).
+    Returns (new_core_busy, done_mask (N, C) bool, energy, busy_seconds,
+    next_candidate) where next_candidate is the farm's min next-event time
+    after the advance (INF when nothing is pending).
     """
     N, C = core_busy.shape
+    if srv_wake_at is None:
+        srv_wake_at = jnp.full((N,), INF, jnp.float32)
+    if srv_idle_since is None:
+        srv_idle_since = jnp.zeros((N,), jnp.float32)
+    if srv_tau is None:
+        srv_tau = jnp.full((N,), INF, jnp.float32)
     block_n = min(block_n, N)
     pad = (-N) % block_n
     if pad:
@@ -66,6 +88,9 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
         srv_state = jnp.pad(srv_state, (0, pad), constant_values=4)  # OFF
         energy = jnp.pad(energy, (0, pad))
         busy_seconds = jnp.pad(busy_seconds, (0, pad))
+        srv_wake_at = jnp.pad(srv_wake_at, (0, pad), constant_values=INF)
+        srv_idle_since = jnp.pad(srv_idle_since, (0, pad))
+        srv_tau = jnp.pad(srv_tau, (0, pad), constant_values=INF)
     Np = N + pad
     grid = (Np // block_n,)
 
@@ -74,7 +99,7 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
     t1 = jnp.asarray(t, jnp.float32).reshape(1)
     t2 = jnp.asarray(t_next, jnp.float32).reshape(1)
 
-    nb, dm, en, bs = pl.pallas_call(
+    nb, dm, en, bs, nc = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -84,6 +109,9 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
             pl.BlockSpec((block_n,), lambda i: (i,)),              # state
             pl.BlockSpec((block_n,), lambda i: (i,)),              # energy
             pl.BlockSpec((block_n,), lambda i: (i,)),              # bsec
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # wake_at
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # idle_since
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # tau
             pl.BlockSpec((state_power.shape[0],), lambda i: (0,)),  # table
         ],
         out_specs=[
@@ -91,15 +119,18 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
             pl.BlockSpec((block_n, C), lambda i: (i, 0)),
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),                    # next cand
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Np, C), core_busy.dtype),
             jax.ShapeDtypeStruct((Np, C), jnp.int8),
             jax.ShapeDtypeStruct((Np,), jnp.float32),
             jax.ShapeDtypeStruct((Np,), jnp.float32),
+            jax.ShapeDtypeStruct((Np // block_n,), jnp.float32),
         ],
         compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(t1, t2, core_busy, srv_state, energy, busy_seconds, state_power)
-    return (nb[:N], dm[:N].astype(bool), en[:N], bs[:N])
+    )(t1, t2, core_busy, srv_state, energy, busy_seconds,
+      srv_wake_at, srv_idle_since, srv_tau, state_power)
+    return (nb[:N], dm[:N].astype(bool), en[:N], bs[:N], nc.min())

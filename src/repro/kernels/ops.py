@@ -45,11 +45,13 @@ def ssm_scan(dt, Bm, Cm, x, A, *, block_d=256, chunk_t=16, interpret=None):
 @functools.partial(jax.jit, static_argnames=("p_core_active", "p_core_idle",
                                              "block_n", "interpret"))
 def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
-                  state_power, *, p_core_active=13.0, p_core_idle=2.0,
+                  state_power, srv_wake_at=None, srv_idle_since=None,
+                  srv_tau=None, *, p_core_active=13.0, p_core_idle=2.0,
                   block_n=256, interpret=None):
     if interpret is None:
         interpret = _default_interpret()
     return _dc.dcsim_advance(core_busy, srv_state, energy, busy_seconds,
                              t, t_next, state_power,
                              p_core_active, p_core_idle,
+                             srv_wake_at, srv_idle_since, srv_tau,
                              block_n=block_n, interpret=interpret)

@@ -85,17 +85,27 @@ def telemetry_accum_reference(job_vals, job_wts, task_vals, task_wts,
 
 def dcsim_advance_reference(core_busy, srv_state, energy, busy_seconds,
                             t, t_next, state_power, p_core_active,
-                            p_core_idle, inf=1.0e30):
+                            p_core_idle, srv_wake_at=None,
+                            srv_idle_since=None, srv_tau=None, inf=1.0e30):
     """One fused engine advance (the hot loop of core/engine.sim_step):
 
       dt      = t_next - t
       power_i = table[state_i] + busy_i·p_act + idle_i·p_idle  (awake only)
       energy += power·dt ; busy_seconds += busy_i·dt
       completions: core slots with busy_until <= t_next -> freed (inf)
+      next candidate = min(surviving busy_until, wake completions,
+                           idle delay-timer expiries)   (farm's share of
+                           the next next_event_time reduction)
 
-    Returns (new_core_busy, done_mask, energy, busy_seconds)."""
+    Returns (new_core_busy, done_mask, energy, busy_seconds, next_cand)."""
+    N, C = core_busy.shape
+    if srv_wake_at is None:
+        srv_wake_at = jnp.full((N,), inf, jnp.float32)
+    if srv_idle_since is None:
+        srv_idle_since = jnp.zeros((N,), jnp.float32)
+    if srv_tau is None:
+        srv_tau = jnp.full((N,), inf, jnp.float32)
     dt = (t_next - t).astype(jnp.float32)
-    C = core_busy.shape[1]
     busy = (core_busy < inf).sum(axis=1).astype(jnp.float32)
     awake = srv_state <= 1                       # ACTIVE=0 / IDLE=1
     p_awake = state_power[0] + busy * p_core_active \
@@ -105,4 +115,7 @@ def dcsim_advance_reference(core_busy, srv_state, energy, busy_seconds,
     busy_seconds = busy_seconds + busy * dt
     done = core_busy <= t_next
     new_busy = jnp.where(done, inf, core_busy)
-    return new_busy, done, energy, busy_seconds
+    timer = jnp.where(srv_state == 1, srv_idle_since + srv_tau, inf)
+    next_cand = jnp.minimum(new_busy.min(),
+                            jnp.minimum(srv_wake_at.min(), timer.min()))
+    return new_busy, done, energy, busy_seconds, next_cand

@@ -11,6 +11,10 @@ Replicates the engine's semantics exactly (no network mode):
   * servers sleep after τ seconds of idleness (SINGLE/DUAL timer) into
     cfg.sleep_state; wake latency/power follow the ACPI profile
   * energy integrates the piecewise-constant power curve exactly
+  * a task hitting a full local queue (cfg.local_q) is DROPPED: it counts
+    toward job completion (finish stamped at drop time) and resolves its
+    DAG edges immediately; newly-unblocked children enqueue via a deferred
+    same-time event (matching the engine, which drains them next step)
 """
 from __future__ import annotations
 
@@ -77,6 +81,7 @@ class OracleSim:
         self.finish = {}
         self.job_finish = {}
         self.events = []
+        self.dropped = 0
 
     # ---- helpers ------------------------------------------------------
     def _wake_latency(self, state):
@@ -118,9 +123,28 @@ class OracleSim:
                            (self.t + dur, 0, "complete", (srv, c)))
         s.state = SrvState.ACTIVE if s.busy() else SrvState.IDLE
 
+    def _drop(self, tid):
+        """Full-queue drop: the task completes-with-drop right now and its
+        DAG edges resolve; ready children enqueue on a deferred same-time
+        event (priority 4: after completions/wakes/timers/arrivals, the
+        engine drains them on the following step at the same sim time)."""
+        self.dropped += 1
+        self.finish[tid] = self.t
+        j = tid // self.cfg.tasks_per_job
+        self.remaining[j] -= 1
+        if self.remaining[j] == 0 and j not in self.job_finish:
+            self.job_finish[j] = self.t
+        for ch in self.children[tid]:
+            self.dep_count[ch] -= 1
+            if self.dep_count[ch] == 0:
+                heapq.heappush(self.events, (self.t, 4, "ready", ch))
+
     def _enqueue(self, tid):
         srv = self.task_server[tid]
         s = self.servers[srv]
+        if len(s.queue) >= self.cfg.local_q:
+            self._drop(tid)
+            return
         s.queue.append(tid)
         if s.state in (SrvState.PKG_C6, SrvState.S3, SrvState.OFF):
             lat = self._wake_latency(s.state)
@@ -181,10 +205,14 @@ class OracleSim:
                         else self._pick(load_snapshot)
                     self.dep_count[tid] = dep[i]
                     self.children[tid] = [j * T + c for c in kids[i]]
-                for i in range(nt):
-                    tid = j * T + i
-                    if self.dep_count[tid] == 0:
-                        self._enqueue(tid)
+                # snapshot the root set BEFORE enqueuing: a root dropped by
+                # a full queue zeroes its children's dep_count, but those
+                # children are NOT roots (the engine marks roots once, at
+                # admit) — they enqueue via the deferred "ready" event
+                roots = [j * T + i for i in range(nt)
+                         if self.dep_count[j * T + i] == 0]
+                for tid in roots:
+                    self._enqueue(tid)
 
             elif kind == "complete":
                 srv, c = payload
@@ -228,6 +256,9 @@ class OracleSim:
                 if s.state == SrvState.IDLE and \
                         abs(s.idle_since - stamp) < 1e-12:
                     s.state = cfg.sleep_state
+
+            elif kind == "ready":
+                self._enqueue(payload)
 
         return self
 

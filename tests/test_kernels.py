@@ -103,15 +103,23 @@ def _check_dcsim_advance(n, c, seed):
     state = rng.integers(0, 6, n).astype(np.int32)
     energy = rng.uniform(0, 100, n).astype(np.float32)
     bsec = rng.uniform(0, 10, n).astype(np.float32)
+    wake = np.where(state == 5, rng.uniform(t, t + 3, n),
+                    np.float32(INF)).astype(np.float32)
+    isince = rng.uniform(0, t, n).astype(np.float32)
+    tau = np.where(rng.random(n) < 0.5, rng.uniform(0.1, 2.0, n),
+                   np.float32(INF)).astype(np.float32)
     ptab = jnp.asarray([65.0, 65.0, 15.0, 9.0, 0.0, 145.0], jnp.float32)
 
     got = dcsim_advance(jnp.asarray(busy), jnp.asarray(state),
                         jnp.asarray(energy), jnp.asarray(bsec),
-                        t, t_next, ptab, 13.0, 2.0, interpret=True)
+                        t, t_next, ptab, 13.0, 2.0,
+                        jnp.asarray(wake), jnp.asarray(isince),
+                        jnp.asarray(tau), interpret=True)
     exp = ref.dcsim_advance_reference(
         jnp.asarray(busy), jnp.asarray(state), jnp.asarray(energy),
         jnp.asarray(bsec), jnp.asarray(t), jnp.asarray(t_next), ptab,
-        13.0, 2.0)
+        13.0, 2.0, jnp.asarray(wake), jnp.asarray(isince),
+        jnp.asarray(tau))
     for g, e in zip(got, exp):
         np.testing.assert_allclose(np.float32(g), np.float32(e),
                                    rtol=1e-5, atol=1e-5)

@@ -3,9 +3,10 @@ individual runs, and the fault-model helpers must be sane."""
 import numpy as np
 import pytest
 
-from repro.core import engine, farm as farm_mod, montecarlo, workload
-from repro.core.jobs import dag_single
-from repro.core.types import SimConfig, SleepPolicy
+from repro.core import engine, farm as farm_mod, montecarlo, topology, \
+    workload
+from repro.core.jobs import dag_chain, dag_single
+from repro.core.types import SchedPolicy, SimConfig, SleepPolicy
 
 
 def _cfg():
@@ -50,6 +51,49 @@ def test_tau_sweep_via_replicas():
     stats = montecarlo.replica_stats(out, cfg)
     assert (stats["finished"] == n_jobs).all()
     assert len(set(np.round(stats["energy"], 3))) > 1   # τ actually matters
+
+
+def test_network_mode_replicas_match_individual_runs():
+    """batched_state must thread topo through to init_state — network
+    replica sweeps used to get tc=None and never route a single flow."""
+    topo = topology.fat_tree(4, link_cap=1.25e9)
+    # ROUND_ROBIN splits each 2-task chain across servers, so the sweep
+    # really routes flows (score policies colocate and would spawn none)
+    cfg = SimConfig(n_servers=16, n_cores=2, local_q=16, max_jobs=64,
+                    tasks_per_job=2, max_children=2, max_flows=128,
+                    sched_policy=SchedPolicy.ROUND_ROBIN,
+                    sleep_policy=SleepPolicy.ALWAYS_ON,
+                    has_network=True, max_events=20_000)
+    n_jobs, R = 40, 2
+    rng = np.random.default_rng(2)
+    specs = [dag_chain(rng.uniform(0.01, 0.04, size=2), edge_bytes=50e6)
+             for _ in range(n_jobs)]
+    arrs = np.stack([workload.poisson_arrivals(25.0, n_jobs, seed=s)
+                     for s in range(R)])
+
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs, topo=topo)
+    assert tc is not None
+    out = montecarlo.run_replicas(cfg, state_b, tc)
+    stats = montecarlo.replica_stats(out, cfg)
+
+    for r in range(R):
+        solo = farm_mod.simulate(cfg, arrs[r], specs, topo=topo)
+        assert stats["finished"][r] == solo.n_finished == n_jobs
+        assert stats["mean_latency"][r] == pytest.approx(
+            solo.mean_latency, rel=1e-4)
+        assert stats["energy"][r] == pytest.approx(solo.server_energy,
+                                                   rel=1e-3)
+    # flows actually routed: ports only leave LPI while links carry flows
+    assert float(np.asarray(out.net.port_residency)[..., 0].sum()) > 0.0
+
+
+def test_batched_state_requires_topo_in_network_mode():
+    cfg = SimConfig(n_servers=4, n_cores=1, max_jobs=8, tasks_per_job=2,
+                    has_network=True)
+    arrs = np.zeros((1, 2))
+    specs = [dag_chain([0.01, 0.01], edge_bytes=1e6)] * 2
+    with pytest.raises(ValueError, match="topo"):
+        montecarlo.batched_state(cfg, arrs, specs)
 
 
 def test_failure_model_and_young_daly():
