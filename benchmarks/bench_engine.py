@@ -25,8 +25,8 @@ from .common import row
 from repro.core import engine, farm as farm_mod, montecarlo, topology, \
     workload
 from repro.core.jobs import dag_chain, dag_single
-from repro.core.types import (SchedPolicy, SimConfig, SleepPolicy, SrvState,
-                              TelemetryConfig)
+from repro.core.types import (SchedPolicy, SimConfig, SleepPolicy,
+                              SrvState, TelemetryConfig, ThermalConfig)
 
 # events/s of the acceptance configs at the seed engine (PR 1), measured
 # on the same container class that runs CI — the denominator of "speedup".
@@ -37,12 +37,14 @@ BASELINE_PRE_PR2 = {"no_network": 657.3, "network_case_d": 2756.0,
                     "network_flows_rr": 1596.2}
 
 
-def one_farm(n_servers, n_jobs=1000, seed=0, telemetry=True, repeats=0):
+def one_farm(n_servers, n_jobs=1000, seed=0, telemetry=True, repeats=0,
+             thermal=None):
     cfg = SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
                     max_jobs=max(n_jobs, 16), tasks_per_job=1,
                     sleep_policy=SleepPolicy.ALWAYS_ON,
                     max_events=20_000,
-                    telemetry=TelemetryConfig(enabled=telemetry))
+                    telemetry=TelemetryConfig(enabled=telemetry),
+                    thermal=thermal or ThermalConfig())
     rng = np.random.default_rng(seed)
     lam = workload.utilization_to_rate(0.5, 0.01, n_servers, 4)
     arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
@@ -107,21 +109,82 @@ def perf_cases(repeats=2, verbose=True):
     return out
 
 
+def _interleaved_engine_eps(cfgs, n_jobs=600, seed=0, rounds=3):
+    """events/s of the jitted loop alone (build/init/summarize excluded)
+    for several configs, measured in INTERLEAVED rounds so slow drift in
+    background machine load cancels out of the ratios — the honest shape
+    for per-step overhead probes.  cfgs: {name: SimConfig}; returns
+    {name: best events/s}."""
+    from repro.core.jobs import build_jobs
+    rng = np.random.default_rng(seed)
+    specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+    runs = {}
+    for name, cfg in cfgs.items():
+        lam = workload.utilization_to_rate(0.5, 0.01, cfg.n_servers,
+                                           cfg.n_cores)
+        arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
+        jt = build_jobs(cfg, np.asarray(arr), specs)
+        state, tc = engine.init_state(cfg, jt)
+        out = engine.run(state, cfg, tc)
+        jax.block_until_ready(out.t)              # compile + warm
+        runs[name] = (state, cfg, tc)
+    best = {name: 0.0 for name in cfgs}
+    for _ in range(rounds):
+        for name, (state, cfg, tc) in runs.items():
+            t0 = time.time()
+            out = engine.run(state, cfg, tc)
+            jax.block_until_ready(out.t)
+            best[name] = max(best[name],
+                             int(out.events) / (time.time() - t0))
+    return best
+
+
 def telemetry_overhead(n_servers=512, n_jobs=600, repeats=2):
-    """Wall-clock cost of the instrumented step: events/s with telemetry
-    off vs on (best of ``repeats``, post-jit).  Tracked in the perf
-    trajectory.  Note: the fraction grew after PR 2 because the base step
-    got ~5x faster, not because telemetry got slower — re-fusing the
-    histogram binning is an open item (ROADMAP)."""
-    eps = {}
-    for mode in (False, True):
-        # same seed every rep: repeats re-time the identical jitted
-        # computation rather than different workload instances
-        e, _ = one_farm(n_servers, n_jobs=n_jobs, seed=0,
-                        telemetry=mode, repeats=repeats)
-        eps[mode] = e
-    return {"events_per_s_off": eps[False], "events_per_s_on": eps[True],
-            "overhead_frac": eps[False] / max(eps[True], 1e-9) - 1.0}
+    """Per-step cost of the instrumented loop: events/s with telemetry
+    off vs on, timing ``engine.run`` only (the simulate-path numbers of
+    PR 1/2 also counted host-side table building and summarization, which
+    drowned the in-loop signal).  The new-finishes compaction
+    (TelemetryConfig.compact) keeps this within the 15% budget — the
+    dense path measured ~20% on the same probe."""
+    def cfg(mode):
+        return SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
+                         max_jobs=max(n_jobs, 16), tasks_per_job=1,
+                         sleep_policy=SleepPolicy.ALWAYS_ON,
+                         max_events=20_000,
+                         telemetry=TelemetryConfig(enabled=mode))
+    eps = _interleaved_engine_eps({"off": cfg(False), "on": cfg(True)},
+                                  n_jobs=n_jobs, rounds=repeats + 2)
+    return {"events_per_s_off": eps["off"], "events_per_s_on": eps["on"],
+            "overhead_frac": eps["off"] / max(eps["on"], 1e-9) - 1.0}
+
+
+def thermal_overhead(n_servers=512, n_jobs=600, repeats=2):
+    """Cost of the thermal subsystem in the jitted loop: events/s with
+    thermal off vs tracking-only (RC temps + carbon/cost) vs fully
+    coupled (throttling crossings armed — an extra per-step event source
+    plus the latch/stretch pass).  The thermal-OFF step is structurally
+    identical to pre-thermal code (static gating), so "off" doubles as
+    the <2%-regression acceptance point."""
+    therm_track = ThermalConfig(enabled=True, r_th=0.25, tau_th=30.0)
+    therm_full = ThermalConfig(enabled=True, r_th=0.25, tau_th=30.0,
+                               t_throttle=70.0, t_release=65.0)
+
+    def cfg(th):
+        return SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
+                         max_jobs=max(n_jobs, 16), tasks_per_job=1,
+                         sleep_policy=SleepPolicy.ALWAYS_ON,
+                         max_events=20_000, thermal=th)
+    eps = _interleaved_engine_eps(
+        {"off": cfg(ThermalConfig()), "tracking": cfg(therm_track),
+         "throttling": cfg(therm_full)},
+        n_jobs=n_jobs, rounds=repeats + 2)
+    return {"events_per_s_off": eps["off"],
+            "events_per_s_tracking": eps["tracking"],
+            "events_per_s_throttling": eps["throttling"],
+            "overhead_frac_tracking":
+                eps["off"] / max(eps["tracking"], 1e-9) - 1.0,
+            "overhead_frac_throttling":
+                eps["off"] / max(eps["throttling"], 1e-9) - 1.0}
 
 
 def replica_throughput(n_replicas=8, n_servers=64, n_jobs=400):
@@ -145,7 +208,10 @@ def replica_throughput(n_replicas=8, n_servers=64, n_jobs=400):
 def run(verbose=True, sizes=(64, 512, 4096, 20480), smoke=False):
     out = {"smoke": smoke}
     if smoke:
-        sizes = (64,)
+        # the 20480-server point rides in smoke too (ROADMAP scale check:
+        # not re-measured since the scatter elimination) — same 600-job
+        # budget as the full run, ~10 s post-compile at ~120 ev/s
+        sizes = (64, 20480)
     for n in sizes:
         eps, res = one_farm(n, n_jobs=600)
         out[f"n{n}"] = {"events_per_s": eps, "finished": res.n_finished}
@@ -153,20 +219,30 @@ def run(verbose=True, sizes=(64, 512, 4096, 20480), smoke=False):
             row(f"bench_engine_n{n}", 1e6 / eps,
                 f"events/s={eps:.0f} finished={res.n_finished}")
     out["perf"] = perf_cases(repeats=1 if smoke else 2, verbose=verbose)
+    therm = thermal_overhead(repeats=1 if smoke else 2)
+    out["thermal"] = therm
+    if verbose:
+        row("bench_engine_thermal",
+            1e6 / max(therm["events_per_s_tracking"], 1e-9),
+            f"off={therm['events_per_s_off']:.0f}ev/s "
+            f"tracking={therm['events_per_s_tracking']:.0f}ev/s "
+            f"(+{therm['overhead_frac_tracking']:.1%}) "
+            f"throttling={therm['events_per_s_throttling']:.0f}ev/s "
+            f"(+{therm['overhead_frac_throttling']:.1%})")
+    tel = telemetry_overhead(repeats=1 if smoke else 2)
+    out["telemetry"] = tel
+    if verbose:
+        row("bench_engine_telemetry",
+            1e6 / max(tel["events_per_s_on"], 1e-9),
+            f"off={tel['events_per_s_off']:.0f}ev/s "
+            f"on={tel['events_per_s_on']:.0f}ev/s "
+            f"overhead={tel['overhead_frac']:.1%}")
     if not smoke:
         eps, _ = replica_throughput()
         out["replicas8"] = {"events_per_s": eps}
         if verbose:
             row("bench_engine_replicas8", 1e6 / eps,
                 f"agg_events/s={eps:.0f}")
-        tel = telemetry_overhead()
-        out["telemetry"] = tel
-        if verbose:
-            row("bench_engine_telemetry",
-                1e6 / max(tel["events_per_s_on"], 1e-9),
-                f"off={tel['events_per_s_off']:.0f}ev/s "
-                f"on={tel['events_per_s_on']:.0f}ev/s "
-                f"overhead={tel['overhead_frac']:.1%}")
     return out
 
 

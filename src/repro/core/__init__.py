@@ -1,10 +1,11 @@
 """HolDCSim core: the paper's contribution, vectorized for TPU.
 
 Modules: types (pytree state + config), engine (dense min-reduction DES),
-server/power/network (hardware models), topology (fat-tree / flattened
-butterfly / BCube / CamCube / star), jobs (task DAGs), workload (Poisson /
-MMPP / trace), scheduler (global policies + case-study controllers),
-farm (simulate entry), montecarlo (replica-parallel sweeps).
+server/power/network (hardware models), thermal (RC temperatures, CRAC
+cooling, carbon/cost), topology (fat-tree / flattened butterfly / BCube /
+CamCube / star), jobs (task DAGs), workload (Poisson / MMPP / trace),
+scheduler (global policies + case-study controllers), farm (simulate
+entry), montecarlo (replica-parallel sweeps).
 """
 from . import (engine, farm, jobs, montecarlo, network, power, scheduler,
-               server, topology, types, workload)  # noqa: F401
+               server, thermal, topology, types, workload)  # noqa: F401

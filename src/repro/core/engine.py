@@ -42,9 +42,11 @@ import jax.numpy as jnp
 
 from . import network as net_mod
 from . import power, scheduler, server, telemetry
-from .types import (INF, FlowTable, JobTable, NetState, SchedState,
-                    ServerFarm, SimConfig, SimState, SrvState, TaskStatus,
-                    init_farm, init_flows, init_net, init_sched, replace)
+from . import thermal as thermal_mod
+from .types import (INF, FlowTable, JobTable, NetState, SchedPolicy,
+                    SchedState, ServerFarm, SimConfig, SimState, SrvState,
+                    TaskStatus, init_farm, init_flows, init_net, init_sched,
+                    replace)
 
 
 # ==========================================================================
@@ -82,6 +84,11 @@ def next_event_time(state: SimState, cfg: SimConfig) -> jnp.ndarray:
     ]
     if cfg.has_network:
         cands.append(state.flows.done_at.min())
+    if cfg.thermal.throttling:
+        # throttle-threshold crossings are real events: the RC exponential
+        # is solved for the crossing time, so throttling engages exactly
+        # when the temperature reaches it, not at the next unrelated event
+        cands.append(thermal_mod.next_crossing(state, cfg))
     t_next = functools.reduce(jnp.minimum, cands)
     # pending READY tasks (or queued work on awake free cores) execute "now"
     ready = (state.jobs.status == TaskStatus.READY).any()
@@ -210,32 +217,40 @@ def _resolve_done_edges(jobs, flows, net, cfg, tc, done_mask, core_task,
             f_bytes = eb.reshape(-1)
             f_child = ch.reshape(-1)
 
+            no_fail = jnp.zeros_like(flat)
             if cfg.use_vectorized_hot_loop:
                 def spawn(args):
-                    flows, net = args
-                    flows, net, _ = net_mod.spawn_flows_many(
+                    flows, net, _ = args
+                    flows, net, ok = net_mod.spawn_flows_many(
                         flows, net, tc, cfg, flat, f_src, f_dst, f_bytes,
                         f_child, now)
-                    return flows, net
+                    return flows, net, flat & ~ok
 
                 # most steps spawn nothing — gate the dense pass
-                flows, net = jax.lax.cond(flat.any(), spawn, lambda a: a,
-                                          (flows, net))
+                flows, net, failed = jax.lax.cond(
+                    flat.any(), spawn, lambda a: a, (flows, net, no_fail))
             else:
                 def spawn_one(i, carry):
-                    flows, net = carry
+                    flows, net, failed = carry
 
                     def do(args):
-                        flows, net = args
+                        flows, net, failed = args
                         fl, nt, ok = net_mod.spawn_flow(
                             flows, net, tc, cfg, f_src[i], f_dst[i],
                             f_bytes[i], f_child[i], now)
-                        return fl, nt
+                        return fl, nt, failed.at[i].set(~ok)
                     return jax.lax.cond(flat[i], do, lambda a: a,
-                                        (flows, net))
+                                        (flows, net, failed))
 
-                flows, net = jax.lax.fori_loop(0, flat.shape[0], spawn_one,
-                                               (flows, net))
+                flows, net, failed = jax.lax.fori_loop(
+                    0, flat.shape[0], spawn_one, (flows, net, no_fail))
+
+            # a full FlowTable drop-resolves the edge like the queue-drop
+            # path: the child's dep decrements immediately (the results
+            # simply never ship) instead of leaving it BLOCKED forever;
+            # the spawn primitives count the drop in flows.flows_dropped
+            dep_count = dep_count.at[jnp.where(failed, f_child, JT)].add(
+                -1, mode="drop")
         else:
             dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
                 -ch_valid.reshape(-1).astype(jnp.int32), mode="drop")
@@ -264,67 +279,115 @@ def _apply_flow_completions(state: SimState, cfg: SimConfig):
 
 
 def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
-    """Admit ONE job whose arrival <= t: assign servers to all its tasks
-    (policy), mark roots READY."""
+    """Admit up to cfg.arrivals_per_step jobs whose arrival <= t in one
+    pass: assign servers to all their tasks (policy), mark roots READY.
+
+    All jobs admitted in the same step share one scheduler snapshot —
+    admission itself never changes server load (queue pushes happen later,
+    at READY drain), so the batched pass equals K sequential picks against
+    the same farm, exactly the ``pick_servers_for_job`` argument one level
+    up.  Same-timestamp bursts (MMPP high state, trace replays) therefore
+    no longer serialize one step per job."""
     jobs, farm, sched = state.jobs, state.farm, state.sched
     J = jobs.arrival.shape[0]
     T = cfg.tasks_per_job
-    j = jobs.arr_ptr
-    nxt = jobs.arrival[jnp.clip(j, 0, J - 1)]
-    can = (j < J) & (nxt <= state.t) & (nxt < INF / 2)
+    K = cfg.arrivals_per_step
+    j0 = jobs.arr_ptr
+    jid = j0 + jnp.arange(K)
+    nxt = jobs.arrival[jnp.clip(jid, 0, J - 1)]
+    elig = (jid < J) & (nxt <= state.t) & (nxt < INF / 2)
+    # arrivals are sorted, so eligibility is a prefix; enforce it anyway
+    # so an unsorted table degrades to the old one-at-a-time behavior
+    elig = jnp.cumprod(elig.astype(jnp.int32)).astype(bool)
+    n_adm = elig.sum()
 
     def _net_cost():
         if cfg.has_network and \
-                cfg.sched_policy == scheduler.SchedPolicy.NETWORK_AWARE:
+                cfg.sched_policy == SchedPolicy.NETWORK_AWARE:
             # wake cost from the front-end (server 0) to each server; the
-            # net state does not change during a job's assignment, so one
-            # evaluation serves every task of the job
+            # net state does not change during admission, so one
+            # evaluation serves every task of the batch
             return jax.vmap(
                 lambda d: net_mod.route_wake_cost(
                     tc, state.net, jnp.int32(0), d)
             )(jnp.arange(cfg.n_servers))
         return None
 
+    def _temp():
+        if cfg.thermal.enabled and \
+                cfg.sched_policy == SchedPolicy.THERMAL_AWARE:
+            return state.thermal.t_srv
+        return None
+
     def admit(args):
         jobs, farm, sched = args
-        base = j * T
-        tids = base + jnp.arange(T)
-        is_valid = jobs.valid[tids]
+        JT = jobs.status.shape[0]
+        tids = j0 * T + jnp.arange(K * T)                  # flat task ids
+        in_range = tids < JT
+        sc = jnp.where(in_range, tids, JT)                 # scatter sentinel
+        gather = jnp.clip(tids, 0, JT - 1)
+        elig_t = jnp.repeat(elig, T)
+        is_valid = jobs.valid[gather] & elig_t & in_range
 
-        if cfg.use_vectorized_hot_loop:
-            # all T assignments in one shot (cumulative-offset round-robin
-            # / shared-snapshot argmin — scheduler.pick_servers_for_job)
-            srvs, rr_new = scheduler.pick_servers_for_job(
-                farm, cfg, sched, is_valid, _net_cost())
-            server_arr = jobs.server.at[tids].set(
-                jnp.where(is_valid, srvs, jobs.server[tids]))
-            jobs = replace(jobs, server=server_arr)
-            sched = replace(sched, rr_ptr=rr_new)
+        root = is_valid & (jobs.dep_count[gather] <= 0)
+
+        if cfg.sched_policy == SchedPolicy.ROUND_ROBIN:
+            if cfg.use_vectorized_hot_loop:
+                # all K*T assignments in one shot (cumulative-offset
+                # round-robin rank matching)
+                srvs, rr_new = scheduler.pick_servers_for_job(
+                    farm, cfg, sched, is_valid)
+                server_arr = jobs.server.at[sc].set(
+                    jnp.where(is_valid, srvs, jobs.server[gather]),
+                    mode="drop")
+                jobs = replace(jobs, server=server_arr)
+                sched = replace(sched, rr_ptr=rr_new)
+            else:
+                def assign_one(i, carry):
+                    jobs, sched = carry
+                    tid = gather[i]
+                    v = is_valid[i]
+                    srv, rr = scheduler.pick_server(farm, cfg, sched)
+                    server_arr = jobs.server.at[tid].set(
+                        jnp.where(v, srv, jobs.server[tid]))
+                    sched = replace(sched,
+                                    rr_ptr=jnp.where(v, rr, sched.rr_ptr))
+                    return replace(jobs, server=server_arr), sched
+
+                jobs, sched = jax.lax.fori_loop(0, K * T, assign_one,
+                                                (jobs, sched))
         else:
+            # score policies: one pick PER JOB (the farm cannot change
+            # during a single job's assignment), but job k's pick must see
+            # the roots committed by jobs 0..k-1 of the same batch —
+            # otherwise a same-timestamp burst piles onto the one argmin
+            # server, where the old one-job-per-step path spread it (each
+            # admit saw the previous job's drained roots as queue load)
             net_cost = _net_cost()
-
-            def assign_one(i, carry):
-                jobs, sched = carry
-                tid = base + i
-                v = jobs.valid[tid]
-                srv, rr = scheduler.pick_server(farm, cfg, sched, net_cost)
-                server_arr = jobs.server.at[tid].set(
-                    jnp.where(v, srv, jobs.server[tid]))
-                sched = replace(sched,
-                                rr_ptr=jnp.where(v, rr, sched.rr_ptr))
-                return replace(jobs, server=server_arr), sched
-
-            jobs, sched = jax.lax.fori_loop(0, T, assign_one, (jobs, sched))
+            temp = _temp()
+            root_k = root.reshape(K, T)
+            extra = jnp.zeros((cfg.n_servers,), jnp.float32)
+            picks = []
+            for k in range(K):                     # static unroll, K small
+                srv_k, _ = scheduler.pick_server(farm, cfg, sched,
+                                                 net_cost, temp, extra)
+                extra = extra.at[srv_k].add(
+                    root_k[k].sum().astype(jnp.float32))
+                picks.append(srv_k)
+            srvs = jnp.repeat(jnp.stack(picks), T)
+            server_arr = jobs.server.at[sc].set(
+                jnp.where(is_valid, srvs, jobs.server[gather]), mode="drop")
+            jobs = replace(jobs, server=server_arr)
 
         # roots -> READY
-        root = jobs.valid[tids] & (jobs.dep_count[tids] <= 0)
-        status = jobs.status.at[tids].set(
-            jnp.where(root, TaskStatus.READY, jobs.status[tids]))
-        jobs = replace(jobs, status=status, arr_ptr=j + 1)
+        status = jobs.status.at[sc].set(
+            jnp.where(root, TaskStatus.READY, jobs.status[gather]),
+            mode="drop")
+        jobs = replace(jobs, status=status, arr_ptr=j0 + n_adm)
         return jobs, farm, sched
 
     jobs, farm, sched = jax.lax.cond(
-        can, admit, lambda a: a, (jobs, farm, sched))
+        n_adm > 0, admit, lambda a: a, (jobs, farm, sched))
     return replace(state, jobs=jobs, farm=farm, sched=sched)
 
 
@@ -438,8 +501,12 @@ def _drain_ready_scalar(state: SimState, cfg: SimConfig):
 
 
 def _start_tasks(state: SimState, cfg: SimConfig):
+    # throttled servers start work at their reduced effective frequency;
+    # freq=None keeps the seed scalar expression when thermal is off
+    freq = thermal_mod.effective_freq(state.thermal, cfg) \
+        if cfg.thermal.throttling else None
     farm, started = server.try_start(
-        state.farm, cfg, state.jobs.service, state.t)
+        state.farm, cfg, state.jobs.service, state.t, freq)
     sid = started.reshape(-1)
     JT = state.jobs.status.shape[0]
     sc = jnp.where(sid >= 0, sid, JT)          # drop-sentinel (see above)
@@ -478,11 +545,36 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
         old_job_finish = state.jobs.job_finish
         old_task_finish = state.jobs.finish
 
-    farm = power.accrue_server_energy(state.farm, cfg, dt)
-    net = state.net
+    thermal_on = cfg.thermal.enabled
+    p_busy = None
+    if thermal_on:
+        # one evaluation of the (throttle-scaled) per-server power feeds
+        # both the exact energy accrual and the thermal RC integrator
+        p_busy = power.server_power(state.farm, cfg,
+                                    state.thermal.throttled)
+
+    farm = power.accrue_server_energy(state.farm, cfg, dt, p_busy)
+    net, flows = state.net, state.flows
     if cfg.has_network:
         net = power.accrue_switch_energy(net, cfg, dt)
-    state = replace(state, farm=farm, net=net, t=t_next)
+        # drain the fluid model over the interval (rates are piecewise
+        # constant, fixed at the last recompute): without this, bytes
+        # never drained and every intervening event pushed done_at later
+        flows = net_mod.advance_flows(flows, dt)
+    therm = state.thermal
+    if thermal_on:
+        p_sw = power.switch_power(net, cfg).sum() if cfg.has_network \
+            else jnp.float32(0.0)
+        therm = thermal_mod.advance(therm, cfg, p_busy[0], p_sw,
+                                    state.t, dt)
+    state = replace(state, farm=farm, net=net, flows=flows, thermal=therm,
+                    t=t_next)
+
+    if cfg.thermal.throttling:
+        # hysteresis latch + in-flight stretch; cond-gated on "any flip"
+        farm, jobs, therm = thermal_mod.apply_throttle(
+            state.farm, state.jobs, state.thermal, cfg, state.t)
+        state = replace(state, farm=farm, jobs=jobs, thermal=therm)
 
     state = replace(state, farm=_apply_wakeups(state.farm, cfg, state.t))
     state = _apply_completions(state, cfg, tc)
@@ -529,13 +621,25 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     return replace(state, events=state.events + 1, done=all_done)
 
 
-def init_state(cfg: SimConfig, jobs: JobTable, topo=None) -> SimState:
+def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
+               racks=None) -> SimState:
+    """``racks`` — optional (N,) host array of rack ids for the thermal
+    recirculation grouping; defaults to the topology's first-hop-switch
+    grouping when a topo is given, else ``i // thermal.rack_size``."""
     if cfg.has_network and topo is None:
         raise ValueError(
             "cfg.has_network=True requires a topology: pass topo= "
             "(flows would silently never route with tc=None)")
+    if cfg.sched_policy == SchedPolicy.THERMAL_AWARE \
+            and not cfg.thermal.enabled:
+        raise ValueError(
+            "SchedPolicy.THERMAL_AWARE requires cfg.thermal.enabled=True "
+            "(placement would silently ignore temperatures)")
     tc = net_mod.topo_consts(topo) if (topo is not None and
                                        cfg.has_network) else None
+    if racks is None and topo is not None and cfg.thermal.enabled:
+        from . import topology as topo_mod
+        racks = topo_mod.rack_of_servers(topo, cfg.thermal.rack_size)
     n_sw = topo.n_switches if topo is not None else 0
     n_ports = topo.n_ports if topo is not None else 1
     n_links = topo.n_links if topo is not None else 1
@@ -548,6 +652,7 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None) -> SimState:
         net=init_net(n_sw, n_ports, n_links, n_lc, cfg),
         sched=init_sched(cfg),
         telem=telemetry.init_telemetry(cfg),
+        thermal=thermal_mod.init_thermal(cfg, racks),
         events=jnp.zeros((), jnp.int32),
         done=jnp.zeros((), bool),
     )

@@ -35,11 +35,26 @@ class SimResult:
     latencies: np.ndarray           # (J,) finished-job latencies (sec)
     # device-side telemetry summary (None when cfg.telemetry.enabled=False)
     telemetry: Optional[telemetry_mod.TelemetrySummary] = None
+    # network: flow spawns refused by a full FlowTable (drop-resolved)
+    flows_dropped: int = 0
+    # thermal/carbon-cost subsystem (zeros/NaN when thermal disabled)
+    cooling_energy: float = 0.0     # CRAC joules
+    carbon_g: float = 0.0           # grams CO2 (IT + cooling)
+    energy_cost: float = 0.0        # $ at the diurnal tariff
+    peak_temp: float = float("nan")  # °C, hottest server over the run
+    mean_temp: float = float("nan")  # °C, final farm mean
+    throttle_seconds: float = 0.0   # summed over servers
+    temps: Optional[np.ndarray] = None       # (N,) final temperatures
+    peak_temps: Optional[np.ndarray] = None  # (N,) per-server peaks
 
     @property
     def mean_power(self) -> float:
-        return (self.server_energy + self.switch_energy) / max(
-            self.sim_time, 1e-12)
+        return (self.server_energy + self.switch_energy
+                + self.cooling_energy) / max(self.sim_time, 1e-12)
+
+    @property
+    def total_energy(self) -> float:
+        return self.server_energy + self.switch_energy + self.cooling_energy
 
 
 def summarize(state: SimState, cfg: SimConfig) -> SimResult:
@@ -51,6 +66,21 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     N, C = cfg.n_servers, cfg.n_cores
     pct = (lambda q: float(np.percentile(lat, q))) if lat.size else \
         (lambda q: float("nan"))
+    thermal_kw = {}
+    if cfg.thermal.enabled:
+        th = state.thermal
+        temps = np.asarray(th.t_srv)
+        peaks = np.asarray(th.t_peak)
+        thermal_kw = dict(
+            cooling_energy=float(th.cool_energy),
+            carbon_g=float(th.carbon_g),
+            energy_cost=float(th.cost),
+            peak_temp=float(peaks.max()),
+            mean_temp=float(temps.mean()),
+            throttle_seconds=float(np.asarray(th.throttle_seconds).sum()),
+            temps=temps,
+            peak_temps=peaks,
+        )
     return SimResult(
         sim_time=t,
         events=int(state.events),
@@ -72,18 +102,22 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
         latencies=lat,
         telemetry=(telemetry_mod.summarize(state, cfg)
                    if cfg.telemetry.enabled else None),
+        flows_dropped=int(state.flows.flows_dropped),
+        **thermal_kw,
     )
 
 
 def simulate(cfg: SimConfig, arrivals, specs, topo=None, tau=None,
-             pools=None) -> SimResult:
+             pools=None, racks=None) -> SimResult:
     """Build the job table, run the engine to completion, summarize.
 
     tau   — scalar or (N,) delay-timer values (seconds; INF = never sleep)
     pools — (N,) 0/1 pool assignment (dual-timer low/high, WASP active/sleep)
+    racks — (N,) rack ids for the thermal recirculation grouping (defaults
+            to the topology's top-of-rack grouping, else i // rack_size)
     """
     jt = jobs_mod.build_jobs(cfg, np.asarray(arrivals), specs)
-    state, tc = engine.init_state(cfg, jt, topo)
+    state, tc = engine.init_state(cfg, jt, topo, racks)
     if tau is not None:
         tau_arr = jnp.broadcast_to(jnp.asarray(tau, cfg.time_dtype),
                                    (cfg.n_servers,))

@@ -74,6 +74,9 @@ def replica_stats(state_b, cfg: SimConfig):
     mean_lat = np.where(finished > 0,
                         lat_sum / np.maximum(finished, 1), np.nan)
     energy = np.asarray(state_b.farm.energy).sum(axis=1)  # (R,)
+    sw_energy = np.asarray(state_b.net.sw_energy).sum(axis=1)
+    cool = np.asarray(state_b.thermal.cool_energy) if cfg.thermal.enabled \
+        else 0.0
     t = np.asarray(state_b.t)
 
     tcfg = cfg.telemetry
@@ -89,17 +92,29 @@ def replica_stats(state_b, cfg: SimConfig):
                 if finished[r] else np.nan
                 for r in range(arr.shape[0])])
         pct = {q: _exact(q) for q in (50, 95, 99)}
-    return {
+    out = {
         "mean_latency": mean_lat,
         "p50_latency": pct[50],
         "p95_latency": pct[95],
         "p99_latency": pct[99],
         "energy": energy,
         "sim_time": t,
-        "mean_power": energy / np.maximum(t, 1e-12),
+        # same definition as SimResult.mean_power: IT + switch + cooling
+        "mean_power": (energy + sw_energy + cool) / np.maximum(t, 1e-12),
         "events": np.asarray(state_b.events),
         "finished": finished,
+        "flows_dropped": np.asarray(state_b.flows.flows_dropped),
     }
+    if cfg.thermal.enabled:
+        th = state_b.thermal
+        out.update({
+            "cooling_energy": np.asarray(th.cool_energy),        # (R,)
+            "carbon_g": np.asarray(th.carbon_g),
+            "energy_cost": np.asarray(th.cost),
+            "peak_temp": np.asarray(th.t_peak).max(axis=1),
+            "throttle_seconds": np.asarray(th.throttle_seconds).sum(axis=1),
+        })
+    return out
 
 
 def poisson_failure_times(mtbf: float, horizon: float, n_nodes: int,

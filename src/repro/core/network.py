@@ -123,7 +123,8 @@ def spawn_flow(flows: FlowTable, net: NetState, tc: TopoConsts,
     def set_if(arr, val):
         return arr.at[slot].set(jnp.where(ok, val, arr[slot]))
 
-    flows = FlowTable(
+    flows = replace(
+        flows,
         src=set_if(flows.src, src.astype(jnp.int32)),
         dst=set_if(flows.dst, dst.astype(jnp.int32)),
         rem=set_if(flows.rem, nbytes.astype(jnp.float32)),
@@ -132,6 +133,8 @@ def spawn_flow(flows: FlowTable, net: NetState, tc: TopoConsts,
         done_at=set_if(flows.done_at, jnp.asarray(INF, flows.done_at.dtype)),
         child=set_if(flows.child, child.astype(jnp.int32)),
         active=set_if(flows.active, True),
+        flows_dropped=flows.flows_dropped
+        + jnp.where(ok, 0, 1).astype(jnp.int32),
     )
     net = replace(net, sw_awake=sw_awake)
     return flows, net, ok
@@ -201,7 +204,8 @@ def spawn_flows_many(flows: FlowTable, net: NetState, tc: TopoConsts,
     ok = need & (order < free.sum())
     slot = jnp.where(ok, slot_by_rank[jnp.clip(order, 0, F - 1)], F)
 
-    flows = FlowTable(
+    flows = replace(
+        flows,
         src=flows.src.at[slot].set(src.astype(jnp.int32), mode="drop"),
         dst=flows.dst.at[slot].set(dst.astype(jnp.int32), mode="drop"),
         rem=flows.rem.at[slot].set(nbytes.astype(jnp.float32), mode="drop"),
@@ -212,6 +216,8 @@ def spawn_flows_many(flows: FlowTable, net: NetState, tc: TopoConsts,
             jnp.asarray(INF, flows.done_at.dtype), mode="drop"),
         child=flows.child.at[slot].set(child.astype(jnp.int32), mode="drop"),
         active=flows.active.at[slot].set(True, mode="drop"),
+        flows_dropped=flows.flows_dropped
+        + (need & ~ok).sum().astype(jnp.int32),
     )
     # wake every switch on every needed route (even slot-exhausted spawns,
     # matching the sequential path which wakes before checking ok)

@@ -18,12 +18,22 @@ __all__ = ["server_power", "accrue_server_energy", "accrue_switch_energy",
            "switch_power", "total_power"]
 
 
-def server_power(farm: ServerFarm, cfg: SimConfig):
-    """Instantaneous per-server power draw (N,) given current states."""
+def server_power(farm: ServerFarm, cfg: SimConfig, throttled=None):
+    """Instantaneous per-server power draw (N,) given current states.
+
+    ``throttled`` (N,) bool — thermal subsystem: active-core power on
+    throttled servers scales by ``cfg.thermal.throttle_power_scale``
+    (linear-DVFS approximation).  None keeps the seed formula bit-exact.
+    """
     sp = cfg.server_power
     C = cfg.n_cores
     busy = (farm.core_busy_until < INF).sum(axis=1).astype(jnp.float32)
-    p_on = sp.p_base + busy * sp.p_core_active + (C - busy) * sp.p_core_idle
+    p_act = sp.p_core_active
+    if throttled is not None:
+        p_act = jnp.where(throttled,
+                          jnp.float32(p_act * cfg.thermal.throttle_power_scale),
+                          jnp.float32(p_act))
+    p_on = sp.p_base + busy * p_act + (C - busy) * sp.p_core_idle
     # state-indexed power table; ACTIVE/IDLE share the S0 formula
     p = jnp.select(
         [farm.srv_state == SrvState.ACTIVE,
@@ -38,8 +48,12 @@ def server_power(farm: ServerFarm, cfg: SimConfig):
     return p, busy
 
 
-def accrue_server_energy(farm: ServerFarm, cfg: SimConfig, dt) -> ServerFarm:
-    p, busy = server_power(farm, cfg)
+def accrue_server_energy(farm: ServerFarm, cfg: SimConfig, dt,
+                         p_busy=None) -> ServerFarm:
+    """Exact interval accrual.  ``p_busy`` optionally supplies a
+    precomputed (power, busy) pair (the thermal path computes it once and
+    shares it with the RC integrator)."""
+    p, busy = server_power(farm, cfg) if p_busy is None else p_busy
     dtf = dt.astype(jnp.float32)
     energy = farm.energy + p * dtf
     # one-hot add, not .at[arange(N), state].add: XLA:CPU lowers scatters
@@ -68,10 +82,11 @@ def switch_power(net: NetState, cfg: SimConfig):
     return chassis + port_p.sum(axis=1) + lc_p.sum(axis=1)
 
 
-def total_power(farm: ServerFarm, net: NetState, cfg: SimConfig):
+def total_power(farm: ServerFarm, net: NetState, cfg: SimConfig,
+                throttled=None):
     """Instantaneous fleet-wide (server_total, switch_total) watts — the
     power signal sampled by the telemetry windows (core/telemetry.py)."""
-    p_srv = server_power(farm, cfg)[0].sum()
+    p_srv = server_power(farm, cfg, throttled)[0].sum()
     if cfg.has_network:
         p_sw = switch_power(net, cfg).sum()
     else:

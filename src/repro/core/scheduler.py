@@ -28,14 +28,23 @@ def server_load(farm: ServerFarm, cfg: SimConfig):
     return busy + farm.q_len
 
 
-def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None):
+def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None,
+                temp=None, extra_load=None):
     """Choose a server for one task.  Returns (server, new_rr_ptr).
 
     net_cost (N,) — case D: number of sleeping switches that would need a
     wakeup to reach each server (0 when network disabled).
+    temp (N,) — THERMAL_AWARE: current server temperatures; placement
+    prefers the coolest eligible server (load as tiebreak), the thermal
+    mirror of the network wake-cost policy.
+    extra_load (N,) — load already committed by earlier jobs of the same
+    same-timestamp admission batch (their enqueued roots), so a burst
+    spreads exactly as it did when each job admitted on its own step.
     """
     N = cfg.n_servers
     load = server_load(farm, cfg).astype(jnp.float32)
+    if extra_load is not None:
+        load = load + extra_load
     enabled = farm.srv_enabled
     full = farm.q_len >= cfg.local_q
 
@@ -59,6 +68,9 @@ def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None):
             | (farm.srv_state == SrvState.S3) | (farm.srv_state == SrvState.OFF)
         score = load + net_cost.astype(jnp.float32) * 100.0 \
             + sleeping.astype(jnp.float32) * 10.0
+    elif cfg.sched_policy == SchedPolicy.THERMAL_AWARE and temp is not None:
+        score = load + (temp - cfg.thermal.t_inlet).astype(jnp.float32) \
+            * cfg.thermal.sched_temp_weight
     elif cfg.sched_policy == SchedPolicy.WASP_POOLS:
         score = load + farm.srv_pool.astype(jnp.float32) * BIG
     elif cfg.sleep_policy == SleepPolicy.DUAL_TIMER:
@@ -70,7 +82,7 @@ def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None):
 
 
 def pick_servers_for_job(farm: ServerFarm, cfg: SimConfig, sched, valid,
-                         net_cost=None):
+                         net_cost=None, temp=None):
     """Assign servers to ALL tasks of one job in one shot (T picks).
 
     Equivalent to T sequential pick_server calls against the same farm
@@ -81,12 +93,15 @@ def pick_servers_for_job(farm: ServerFarm, cfg: SimConfig, sched, valid,
 
     valid (T,) bool — padding tasks get a pick too but callers must not
     commit them (matching the scalar loop, which gates commits on valid).
+    T is any length: the engine also calls this with the flattened task
+    mask of a same-timestamp arrival BATCH (all K admitted jobs share the
+    same farm snapshot, so the equivalence argument is unchanged).
     Returns (servers (T,) int32, new_rr_ptr).
     """
     N, T = cfg.n_servers, valid.shape[0]
 
     if cfg.sched_policy != SchedPolicy.ROUND_ROBIN:
-        srv, _ = pick_server(farm, cfg, sched, net_cost)
+        srv, _ = pick_server(farm, cfg, sched, net_cost, temp)
         return jnp.broadcast_to(srv, (T,)), sched.rr_ptr
 
     load = server_load(farm, cfg).astype(jnp.float32)

@@ -90,12 +90,16 @@ def begin_wake_mask(farm: ServerFarm, cfg: SimConfig, mask, now):
         wake_count=farm.wake_count + sleeping.astype(jnp.int32))
 
 
-def try_start(farm: ServerFarm, cfg: SimConfig, service, now):
+def try_start(farm: ServerFarm, cfg: SimConfig, service, now, freq=None):
     """Start as many queued tasks as there are free cores, in ONE masked
     pass: the r-th free core of each awake server takes the r-th queue
     entry, for r < min(free cores, queue length).  Identical to the seed's
     C sequential pop rounds but with zero scatters — the core arrays are
     rebuilt with elementwise where (XLA:CPU scatters serialize).
+
+    ``freq`` (N,) optionally overrides the scalar cfg.core_freq with a
+    per-server effective frequency (thermal throttling); None keeps the
+    seed expression bit-exact.
 
     Returns (farm, started_tids (N, C), -1 where no start) so the engine
     can flip task statuses."""
@@ -109,7 +113,10 @@ def try_start(farm: ServerFarm, cfg: SimConfig, service, now):
     start = free & (fr < n_start[:, None])                      # (N, C)
     qpos = (farm.q_head[:, None] + fr) % Q                      # (N, C)
     tid = jnp.take_along_axis(farm.q_tasks, qpos, axis=1)       # (N, C)
-    svc = service[jnp.clip(tid, 0)] / cfg.core_freq
+    if freq is None:
+        svc = service[jnp.clip(tid, 0)] / cfg.core_freq
+    else:
+        svc = service[jnp.clip(tid, 0)] / freq[:, None]
     busy_until = now + svc.astype(farm.core_busy_until.dtype)
 
     farm = replace(

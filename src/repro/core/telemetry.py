@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import power
+from . import thermal as thermal_mod
 from .types import (INF, SimConfig, SrvState, TaskStatus, Telemetry,
                     TelemetryConfig, replace)
 
@@ -39,9 +40,12 @@ __all__ = ["init_telemetry", "window_values", "accumulate", "summarize",
            "hist_percentile", "hist_mean", "bin_edges", "TelemetrySummary",
            "WIN_COLS"]
 
-# ``Telemetry.win`` column layout (all columns are time-weighted sums;
-# column WIN_OCC accumulates dt itself, i.e. the occupancy used to
-# normalize the others back to time averages).
+# ``Telemetry.win`` column layout.  Columns up to WIN_MAX_TEMP are
+# time-weighted sums (column WIN_OCC accumulates dt itself, i.e. the
+# occupancy used to normalize the others back to time averages); the
+# columns from WIN_CI on are *exact interval integrals* (already
+# time-integrated in closed form, no normalization by dt).  The thermal
+# block stays zero when cfg.thermal.enabled=False.
 WIN_OCC = 0          # sum of dt landing in this window
 WIN_ACTIVE_JOBS = 1  # tasks in flight (READY|QUEUED|RUNNING) · dt
 WIN_AWAKE = 2        # servers in ACTIVE|IDLE · dt
@@ -49,7 +53,14 @@ WIN_QDEPTH = 3       # local + global queue occupancy · dt
 WIN_SRV_POWER = 4    # total server power (W) · dt  == joules per window
 WIN_SW_POWER = 5     # total switch power (W) · dt
 WIN_STATE0 = 6       # server count in SrvState s · dt, s = 0..NUM-1
-WIN_COLS = WIN_STATE0 + SrvState.NUM
+WIN_COOL_POWER = WIN_STATE0 + SrvState.NUM   # CRAC power (W) · dt
+WIN_MEAN_TEMP = WIN_COOL_POWER + 1           # farm-mean temperature · dt
+WIN_MAX_TEMP = WIN_MEAN_TEMP + 1             # farm-max temperature · dt
+WIN_CI = WIN_MAX_TEMP + 1                    # ∫ carbon intensity dt
+WIN_PRICE = WIN_CI + 1                       # ∫ electricity price dt
+WIN_CARBON_G = WIN_PRICE + 1                 # grams CO2 in this window
+WIN_COST = WIN_CARBON_G + 1                  # $ in this window
+WIN_COLS = WIN_COST + 1
 
 
 # ==========================================================================
@@ -79,8 +90,11 @@ def init_telemetry(cfg: SimConfig) -> Telemetry:
 def window_values(state, cfg: SimConfig, dt) -> jnp.ndarray:
     """(WIN_COLS,) metric·dt vector for the piecewise-constant interval
     [t, t+dt) — computed from the PRE-advance state, matching the exact
-    energy integration in power.accrue_server_energy."""
+    energy integration in power.accrue_server_energy.  The carbon/price
+    columns are closed-form interval integrals (not rate·dt samples), so
+    window sums reproduce the accumulated grams/dollars exactly."""
     farm = state.farm
+    tcfg = cfg.thermal
     dtf = dt.astype(jnp.float32)
     s = state.jobs.status
     active = ((s == TaskStatus.READY) | (s == TaskStatus.QUEUED)
@@ -88,11 +102,48 @@ def window_values(state, cfg: SimConfig, dt) -> jnp.ndarray:
     awake = ((farm.srv_state == SrvState.ACTIVE)
              | (farm.srv_state == SrvState.IDLE)).sum().astype(jnp.float32)
     qdepth = (farm.q_len.sum() + state.sched.gq_len).astype(jnp.float32)
-    p_srv, p_sw = power.total_power(farm, state.net, cfg)
+    throttled = state.thermal.throttled if tcfg.enabled else None
+    p_srv, p_sw = power.total_power(farm, state.net, cfg, throttled)
     per_state = (farm.srv_state[:, None]
                  == jnp.arange(SrvState.NUM)[None, :]).sum(0)
     head = jnp.stack([jnp.float32(1.0), active, awake, qdepth, p_srv, p_sw])
-    return jnp.concatenate([head, per_state.astype(jnp.float32)]) * dtf
+    if tcfg.enabled:
+        t_srv = state.thermal.t_srv
+        p_cool = thermal_mod.cooling_power(p_srv + p_sw, tcfg)
+        ici, ipr = thermal_mod.carbon_price_integrals(tcfg, state.t, dt)
+        kw = (p_srv + p_sw + p_cool) * jnp.float32(1.0e-3)
+        # temperature varies exponentially WITHIN the interval, so the
+        # mean column integrates the closed form (∫T dt = target·dt +
+        # (T0−target)·τ·(1−e^{−dt/τ}), averaged over servers) and the max
+        # column uses the endpoint max (trajectories are monotone toward
+        # their targets) — same exactness as the energy/carbon columns
+        p_vec = power.server_power(farm, cfg, throttled)[0]
+        target = p_vec * tcfg.r_th \
+            + thermal_mod.inlet_temps(state.thermal, tcfg)
+        alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
+        t_end = t_srv + (target - t_srv) * alpha
+        mean_int = target.mean() * dtf \
+            + (t_srv - target).mean() * tcfg.tau_th * alpha
+        max_interval = jnp.maximum(t_srv, t_end).max()
+        therm_cols = jnp.stack([
+            p_cool * dtf, mean_int, max_interval * dtf,
+            ici, ipr, kw * ici / 3600.0, kw * ipr / 3600.0])
+    else:
+        therm_cols = jnp.zeros((7,), jnp.float32)
+    base = jnp.concatenate([head, per_state.astype(jnp.float32)]) * dtf
+    return jnp.concatenate([base, therm_cols])
+
+
+def _compact_finishes(mask, vals, K: int, fill: float):
+    """Gather the first K True entries of ``mask`` into a (K,) batch of
+    (values, weights) via top_k — scatter-free (XLA:CPU serializes
+    scatters, which is exactly the cost this compaction removes from the
+    binning).  Padding slots carry ``fill`` at weight 0, so the weighted
+    histogram of the batch equals the dense masked histogram whenever
+    mask.sum() <= K (counts are exact in f32 well past 2^24)."""
+    w, idx = jax.lax.top_k(mask.astype(jnp.float32), K)
+    out = jnp.where(w > 0, vals[idx], jnp.float32(fill))
+    return out, w
 
 
 def window_index(t, dt, tcfg: TelemetryConfig) -> jnp.ndarray:
@@ -112,43 +163,71 @@ def accumulate(telem: Telemetry, cfg: SimConfig, jobs, old_job_finish,
     """
     tcfg = cfg.telemetry
     T = cfg.tasks_per_job
-
     new_job = (old_job_finish >= INF / 2) & (jobs.job_finish < INF / 2)
-    job_lat = jnp.maximum(jobs.job_finish - jobs.arrival, 0.0)
-    jw = new_job.astype(jnp.float32)
-
     new_task = (old_task_finish >= INF / 2) & (jobs.finish < INF / 2)
-    # task latency = task finish - its job's arrival (sojourn to this stage)
-    arr_t = jnp.repeat(jobs.arrival, T)
-    task_lat = jnp.maximum(jobs.finish - arr_t, 0.0)
-    tw = new_task.astype(jnp.float32)
-
-    has_sla = jobs.sla < INF / 2
-    miss = (new_job & has_sla & (job_lat > jobs.sla)).sum().astype(jnp.int32)
-    tot = (new_job & has_sla).sum().astype(jnp.int32)
-    tail = (new_job & (job_lat > tcfg.tail_thresh)).sum().astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
 
     def bin_and_bucket(args):
+        # everything latency-shaped lives INSIDE the gate: quiet steps
+        # must not pay the (J,)/(J·T,) latency/QoS passes
         jh0, th0, win0 = args
+        job_lat = jnp.maximum(jobs.job_finish - jobs.arrival, 0.0)
+        jw = new_job.astype(jnp.float32)
+        # task latency = finish - its job's arrival (sojourn to this stage)
+        arr_t = jnp.repeat(jobs.arrival, T)
+        task_lat = jnp.maximum(jobs.finish - arr_t, 0.0)
+        tw = new_task.astype(jnp.float32)
+
+        has_sla = jobs.sla < INF / 2
+        miss = (new_job & has_sla
+                & (job_lat > jobs.sla)).sum().astype(jnp.int32)
+        tot = (new_job & has_sla).sum().astype(jnp.int32)
+        tail = (new_job
+                & (job_lat > tcfg.tail_thresh)).sum().astype(jnp.int32)
+
         if tcfg.use_kernel:
             from ..kernels import telemetry_bin
             interp = jax.default_backend() != "tpu"
-            return telemetry_bin.telemetry_accum(
+            jh, th, win = telemetry_bin.telemetry_accum(
                 job_lat, jw, task_lat, tw, jh0, th0, win0, widx, wvals,
                 tcfg.lat_lo, tcfg.lat_hi, interpret=interp)
+            return jh, th, win, miss, tot, tail
         from ..kernels import ref
-        return ref.telemetry_accum_reference(
-            job_lat, jw, task_lat, tw, jh0, th0, win0, widx, wvals,
-            tcfg.lat_lo, tcfg.lat_hi)
+
+        def dense(args):
+            jh0, th0, win0 = args
+            return ref.telemetry_accum_reference(
+                job_lat, jw, task_lat, tw, jh0, th0, win0, widx, wvals,
+                tcfg.lat_lo, tcfg.lat_hi)
+
+        Kc = tcfg.compact
+        if Kc <= 0 or Kc >= job_lat.shape[0]:
+            return (*dense(args), miss, tot, tail)
+
+        # most finishing steps complete only a handful of jobs/tasks
+        # (bounded by free cores + drop resolution): gather them into a
+        # (Kc,)-batch so the log-binning stops paying (J)+(J·T)-wide
+        # work, falling back to the dense pass on mass-finish steps
+        def compact(args):
+            jv, jww = _compact_finishes(new_job, job_lat, Kc, tcfg.lat_lo)
+            tv, tww = _compact_finishes(new_task, task_lat, Kc, tcfg.lat_lo)
+            jh0, th0, win0 = args
+            return ref.telemetry_accum_reference(
+                jv, jww, tv, tww, jh0, th0, win0, widx, wvals,
+                tcfg.lat_lo, tcfg.lat_hi)
+
+        small = (new_job.sum() <= Kc) & (new_task.sum() <= Kc)
+        jh, th, win = jax.lax.cond(small, compact, dense, args)
+        return jh, th, win, miss, tot, tail
 
     def bucket_only(args):
         # no completions this step: the histograms are untouched and only
         # the (1-row) window bucket accrues — skip the (J,)/(J*T,)-row
         # histogram scatters that dominate quiet steps
         jh0, th0, win0 = args
-        return jh0, th0, win0.at[widx].add(wvals)
+        return jh0, th0, win0.at[widx].add(wvals), zero, zero, zero
 
-    jh, th, win = jax.lax.cond(
+    jh, th, win, miss, tot, tail = jax.lax.cond(
         new_job.any() | new_task.any(), bin_and_bucket, bucket_only,
         (telem.job_hist, telem.task_hist, telem.win))
 
@@ -228,6 +307,14 @@ class TelemetrySummary:
     switch_power: np.ndarray        # (W,) watts
     state_residency: np.ndarray     # (W, SrvState.NUM) seconds
     n_windows_used: int
+    # thermal/carbon/cost series (zeros unless cfg.thermal.enabled)
+    cooling_power: np.ndarray = None    # (W,) watts, time-averaged
+    mean_temp: np.ndarray = None        # (W,) °C, farm mean
+    max_temp: np.ndarray = None         # (W,) °C, farm max
+    carbon_intensity: np.ndarray = None  # (W,) gCO2/kWh, time-averaged
+    price: np.ndarray = None            # (W,) $/kWh, time-averaged
+    carbon_per_window: np.ndarray = None  # (W,) grams CO2 (raw integral)
+    cost_per_window: np.ndarray = None    # (W,) $ (raw integral)
 
     @property
     def sla_miss_rate(self) -> float:
@@ -276,4 +363,11 @@ def summarize(state, cfg: SimConfig) -> TelemetrySummary:
         switch_power=win[:, WIN_SW_POWER] / norm,
         state_residency=win[:, WIN_STATE0:WIN_STATE0 + SrvState.NUM],
         n_windows_used=used,
+        cooling_power=win[:, WIN_COOL_POWER] / norm,
+        mean_temp=win[:, WIN_MEAN_TEMP] / norm,
+        max_temp=win[:, WIN_MAX_TEMP] / norm,
+        carbon_intensity=win[:, WIN_CI] / norm,
+        price=win[:, WIN_PRICE] / norm,
+        carbon_per_window=win[:, WIN_CARBON_G],
+        cost_per_window=win[:, WIN_COST],
     )

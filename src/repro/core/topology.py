@@ -26,7 +26,7 @@ from collections import deque
 import numpy as np
 
 __all__ = ["Topology", "fat_tree", "flattened_butterfly", "bcube", "camcube",
-           "star"]
+           "star", "rack_of_servers"]
 
 
 @dataclasses.dataclass
@@ -127,6 +127,33 @@ def _build(name, n_servers, n_switches, edges, link_cap, ports_per_lc=8):
         links=links, link_cap=np.full((L,), link_cap, np.float32),
         link_port=link_port, routes=routes, route_len=route_len,
         route_sw=route_sw)
+
+
+def rack_of_servers(topo: Topology, rack_size: int = 8) -> np.ndarray:
+    """(N,) rack grouping for the thermal recirculation model
+    (core/thermal.py): servers sharing a first-hop switch share a rack —
+    the natural top-of-rack reading of every switch-based topology here
+    (fat-tree edge switches, butterfly routers, BCube level-0, the star's
+    single rack).  Switchless topologies (CamCube) fall back to
+    ``i // rack_size`` chunks.
+
+    Ids are raw first-switch indices; ``thermal.init_thermal`` densifies
+    them, so gaps are fine.
+    """
+    n = topo.n_servers
+    if topo.n_switches == 0:
+        return np.arange(n) // max(rack_size, 1)
+    first_sw = np.full(n, -1, np.int64)
+    for a, b in topo.links:
+        a, b = int(a), int(b)
+        if a < n <= b and first_sw[a] < 0:
+            first_sw[a] = b - n
+        elif b < n <= a and first_sw[b] < 0:
+            first_sw[b] = a - n
+    # isolated servers (none in the provided builders) get their own rack
+    lone = first_sw < 0
+    first_sw[lone] = topo.n_switches + np.arange(n)[lone]
+    return first_sw
 
 
 def star(n_servers: int, link_cap: float = 125e6, ports_per_lc: int = 24):

@@ -79,6 +79,7 @@ class SchedPolicy:
     NETWORK_AWARE = 2      # least network wake cost (case study D)
     PROVISIONED = 3        # threshold-driven active-set (case study A)
     WASP_POOLS = 4         # two-pool workload adaptive (case study C)
+    THERMAL_AWARE = 5      # coolest eligible server (thermal subsystem)
 
 
 class SleepPolicy:
@@ -152,6 +153,68 @@ class SwitchPowerProfile:
 
 
 @dataclass(frozen=True)
+class ThermalConfig:
+    """Thermal / cooling / carbon-cost subsystem knobs (core/thermal.py).
+
+    Per-server thermal RC model: ``T' = (P·r_th − (T − T_inlet)) / tau_th``.
+    Power is piecewise constant between DES events, so the closed-form
+    exponential update integrates the ODE with zero discretization error —
+    the same trick as the exact energy accrual.  Rack-level recirculation
+    couples a server's inlet to its rack's mean excess temperature (held
+    piecewise constant per interval, recomputed at every event).
+
+    All behavioral couplings are off by default: ``enabled=False`` adds
+    nothing to the step, and ``t_throttle=INF`` disables throttling even
+    when temperatures are tracked.
+    """
+
+    enabled: bool = False
+    # RC parameters: steady state T = T_inlet + P·r_th
+    r_th: float = 0.25          # °C per Watt of server power
+    tau_th: float = 60.0        # thermal time constant (seconds)
+    t_inlet: float = 22.0       # CRAC supply / cold-aisle setpoint (°C)
+    # rack recirculation: inlet_i = t_inlet + recirc·rack_mean(T − t_inlet)
+    recirc: float = 0.2
+    rack_size: int = 8          # servers per rack (rack id = i // rack_size
+                                # unless a topology grouping is supplied)
+    # temperature-coupled throttling with hysteresis: servers at/above
+    # t_throttle run at core_freq·throttle_freq (in-flight work stretches)
+    # until they cool to t_release; active-core power scales by
+    # throttle_power_scale while throttled (linear-DVFS approximation)
+    t_throttle: float = INF     # °C; INF = never throttle
+    t_release: float = INF      # effective release = min(t_release, t_throttle)
+    throttle_freq: float = 0.5
+    throttle_power_scale: float = 0.5
+    # CRAC efficiency: COP(T_sup) = cop_a·T² + cop_b·T + cop_c evaluated at
+    # the (static) supply setpoint; cooling power = P_IT / COP
+    cop_a: float = 0.0068
+    cop_b: float = 0.0008
+    cop_c: float = 0.458
+    # grid carbon intensity (gCO2/kWh) and electricity price ($/kWh):
+    # diurnal sinusoids base·(1 + swing·sin(2π(t+phase)/period)) integrated
+    # in closed form over each event interval
+    carbon_base: float = 350.0
+    carbon_swing: float = 0.4
+    carbon_period: float = 86400.0
+    carbon_phase: float = 0.0
+    price_base: float = 0.12
+    price_swing: float = 0.5
+    price_period: float = 86400.0
+    price_phase: float = 0.0
+    # THERMAL_AWARE placement: score = load + (T − t_inlet)·weight
+    sched_temp_weight: float = 100.0
+
+    @property
+    def cop(self) -> float:
+        t = self.t_inlet
+        return self.cop_a * t * t + self.cop_b * t + self.cop_c
+
+    @property
+    def throttling(self) -> bool:
+        return self.enabled and self.t_throttle < INF / 2
+
+
+@dataclass(frozen=True)
 class TelemetryConfig:
     """Device-side telemetry (histograms / windowed series / QoS) knobs.
 
@@ -176,6 +239,12 @@ class TelemetryConfig:
     # route the hot accumulation through the fused Pallas kernel
     # (kernels/telemetry_bin.py); off-TPU it falls back to interpret mode
     use_kernel: bool = False
+    # compact the "new finishes" set into a batch of this size before
+    # histogram binning when few jobs/tasks finished this step (the jnp
+    # path otherwise pays dense (J·T)-wide binning per finishing step);
+    # 0 disables compaction, and steps with more finishes than the batch
+    # fall back to the dense path
+    compact: int = 32
 
 
 @dataclass(frozen=True)
@@ -192,6 +261,9 @@ class SimConfig:
     max_flows: int = 256            # concurrent network flows
     max_events: int = 50_000        # scan iteration budget
     ready_per_step: int = 8         # bounded ready->enqueue work per step
+    arrivals_per_step: int = 8      # same-timestamp jobs admitted per step
+                                    # (one shared scheduler snapshot — open
+                                    # loop bursts no longer serialize)
     # hot-loop implementation: dense masked batch updates for drain /
     # arrival-assignment / flow-spawn (True) vs the seed scalar fori_loops
     # (False, kept as the semantic reference — tests compare both)
@@ -219,6 +291,8 @@ class SimConfig:
     switch_power: SwitchPowerProfile = field(default_factory=SwitchPowerProfile)
     # device-side telemetry subsystem
     telemetry: TelemetryConfig = field(default_factory=TelemetryConfig)
+    # thermal / cooling / carbon-cost subsystem
+    thermal: ThermalConfig = field(default_factory=ThermalConfig)
     time_dtype: Any = jnp.float32
 
     @property
@@ -285,6 +359,9 @@ class FlowTable:
     done_at: jnp.ndarray            # (F,) projected completion (INF inactive)
     child: jnp.ndarray              # (F,) task whose dep_count decrements
     active: jnp.ndarray             # (F,) bool
+    flows_dropped: jnp.ndarray      # () spawns refused by a full table (the
+                                    # edge drop-resolves: dep decremented
+                                    # immediately instead of deadlocking)
 
 
 @pytree_dataclass
@@ -326,6 +403,23 @@ class Telemetry:
 
 
 @pytree_dataclass
+class ThermalState:
+    """Thermal/carbon/cost state (core/thermal.py).  Sized (1,) minimal
+    arrays when the subsystem is disabled, like Telemetry."""
+
+    t_srv: jnp.ndarray              # (N,) server temperature (°C)
+    throttled: jnp.ndarray          # (N,) bool — hysteresis latch
+    rack_id: jnp.ndarray            # (N,) server -> rack map (constant)
+    rack_onehot: jnp.ndarray        # (R, N) f32 membership (constant)
+    rack_inv: jnp.ndarray           # (R,) 1/servers-per-rack (constant)
+    t_peak: jnp.ndarray             # (N,) running max temperature
+    throttle_seconds: jnp.ndarray   # (N,) time spent throttled
+    cool_energy: jnp.ndarray        # () CRAC joules
+    carbon_g: jnp.ndarray           # () grams CO2 (IT + cooling)
+    cost: jnp.ndarray               # () electricity cost ($)
+
+
+@pytree_dataclass
 class SimState:
     t: jnp.ndarray                  # () current simulation time
     farm: ServerFarm
@@ -334,6 +428,7 @@ class SimState:
     net: NetState
     sched: SchedState
     telem: Telemetry
+    thermal: ThermalState
     events: jnp.ndarray             # () processed event count
     done: jnp.ndarray               # () bool — all jobs finished
 
@@ -377,6 +472,7 @@ def init_flows(cfg: SimConfig) -> FlowTable:
         done_at=jnp.full((F,), INF, tdt),
         child=jnp.full((F,), -1, jnp.int32),
         active=jnp.zeros((F,), bool),
+        flows_dropped=jnp.zeros((), jnp.int32),
     )
 
 

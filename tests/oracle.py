@@ -1,10 +1,12 @@
 """Sequential heapq-based DES oracle — the classical implementation of the
 paper's engine, used to validate the vectorized JAX engine event-for-event.
 
-Replicates the engine's semantics exactly (no network mode):
+Replicates the engine's semantics exactly:
   * global scheduler assigns every task of a job at arrival, using a
     load snapshot taken before any of the job's tasks are enqueued
-    (LOAD_BALANCE ties break to the lowest server index, like argmin)
+    (LOAD_BALANCE ties break to the lowest server index, like argmin);
+    ALL jobs arriving at the same timestamp share one snapshot (the
+    engine's batched same-time admission)
   * ROUND_ROBIN advances the pointer per task
   * a task becomes READY when all DAG parents finished (dep_count == 0);
     READY tasks enqueue at their assigned server and trigger wakeups
@@ -15,6 +17,22 @@ Replicates the engine's semantics exactly (no network mode):
     toward job completion (finish stamped at drop time) and resolves its
     DAG edges immediately; newly-unblocked children enqueue via a deferred
     same-time event (matching the engine, which drains them next step)
+
+Optional network mode (pass ``topo=``): the equal-share fluid flow model
+over the topology's BFS routes — per-link flow counts, rate = min over
+route links of cap/share, bytes drained exactly between events, and
+``max_flows`` slot exhaustion drop-resolving the edge (dep decremented
+immediately, counted in ``flows_dropped``).  Supports comm_model=0 and
+topologies whose route links never charge LPI/switch wake extras on spawn
+(star: every link's side-a endpoint is a server, all switches awake) so
+the fixed-latency budget is zero, like the engine.
+
+Optional thermal mode (cfg.thermal.enabled): the numpy reference
+integrator for core/thermal.py — per-server RC temperatures advanced with
+the same closed-form exponential between events (rack-recirculated inlet
+held piecewise constant), CRAC cooling energy, closed-form diurnal
+carbon/cost integrals, and threshold-crossing throttle events with
+hysteresis that stretch in-flight work by the frequency ratio.
 """
 from __future__ import annotations
 
@@ -23,7 +41,9 @@ import math
 
 import numpy as np
 
-from repro.core.types import INF, SchedPolicy, SimConfig, SleepPolicy, SrvState
+from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
+                              SrvState)
+from repro.core.thermal import TEMP_TOL, _CROSS_EPS
 
 
 class OracleServer:
@@ -41,6 +61,7 @@ class OracleServer:
         self.residency = np.zeros(SrvState.NUM)
         self.busy_core_seconds = 0.0
         self.wake_count = 0
+        self.throttled = False
 
     def busy(self):
         return sum(1 for c in self.cores if c is not None)
@@ -48,11 +69,20 @@ class OracleServer:
     def load(self):
         return self.busy() + len(self.queue)
 
+    def freq(self):
+        f = self.cfg.core_freq
+        if self.throttled:
+            f *= self.cfg.thermal.throttle_freq
+        return f
+
     def power(self):
         sp = self.cfg.server_power
         if self.state in (SrvState.ACTIVE, SrvState.IDLE):
             b = self.busy()
-            return (sp.p_base + b * sp.p_core_active
+            p_act = sp.p_core_active
+            if self.throttled:
+                p_act *= self.cfg.thermal.throttle_power_scale
+            return (sp.p_base + b * p_act
                     + (self.cfg.n_cores - b) * sp.p_core_idle)
         return {SrvState.PKG_C6: sp.p_pkg_c6, SrvState.S3: sp.p_s3,
                 SrvState.OFF: 0.0, SrvState.WAKING: sp.p_wake}[self.state]
@@ -63,10 +93,32 @@ class OracleServer:
         self.busy_core_seconds += self.busy() * dt
 
 
-class OracleSim:
-    """Run with the same (cfg, arrivals, specs, tau) as farm.simulate."""
+class OracleFlow:
+    __slots__ = ("src", "dst", "rem", "extra", "rate", "child", "links",
+                 "done_at", "active")
 
-    def __init__(self, cfg: SimConfig, arrivals, specs, tau=None):
+    def __init__(self, src, dst, nbytes, child, links):
+        self.src, self.dst, self.child = src, dst, child
+        self.rem = float(nbytes)
+        self.extra = 0.0              # star/comm_model=0: no wake charges
+        self.rate = 0.0
+        self.links = links
+        self.done_at = INF
+        self.active = True
+
+
+def _rate_integral(base, swing, period, phase, t1, t2):
+    w = 2.0 * math.pi / period
+    osc = (math.cos(w * (t1 + phase)) - math.cos(w * (t2 + phase))) / w
+    return base * ((t2 - t1) + swing * osc)
+
+
+class OracleSim:
+    """Run with the same (cfg, arrivals, specs, tau[, topo, racks]) as
+    farm.simulate."""
+
+    def __init__(self, cfg: SimConfig, arrivals, specs, tau=None, topo=None,
+                 racks=None):
         self.cfg = cfg
         self.arrivals = np.asarray(arrivals, float)
         self.specs = specs
@@ -83,19 +135,126 @@ class OracleSim:
         self.events = []
         self.dropped = 0
 
+        # network (optional)
+        self.topo = topo
+        self.flows = {}
+        self.flow_seq = 0
+        self.flows_dropped = 0
+
+        # thermal (optional)
+        tcfg = cfg.thermal
+        self.thermal_on = tcfg.enabled
+        if self.thermal_on:
+            N = cfg.n_servers
+            if racks is None:
+                racks = np.arange(N) // max(tcfg.rack_size, 1)
+            _, self.rack = np.unique(np.asarray(racks), return_inverse=True)
+            self.temp = np.full(N, tcfg.t_inlet, float)
+            self.t_peak = np.full(N, tcfg.t_inlet, float)
+            self.throttle_seconds = np.zeros(N)
+            self.cool_energy = 0.0
+            self.carbon_g = 0.0
+            self.cost = 0.0
+            self.cop = tcfg.cop
+
     # ---- helpers ------------------------------------------------------
     def _wake_latency(self, state):
         sp = self.cfg.server_power
         return {SrvState.PKG_C6: sp.t_wake_pkg_c6, SrvState.S3: sp.t_wake_s3,
                 SrvState.OFF: sp.t_wake_off}.get(state, 0.0)
 
+    def _inlet(self):
+        tcfg = self.cfg.thermal
+        excess = self.temp - tcfg.t_inlet
+        means = np.bincount(self.rack, weights=excess) \
+            / np.bincount(self.rack)
+        return tcfg.t_inlet + tcfg.recirc * means[self.rack]
+
+    def _powers(self):
+        return np.asarray([s.power() for s in self.servers])
+
     def _accrue_all(self, t_next):
         dt = t_next - self.t
         assert dt >= -1e-9, (t_next, self.t)
+        dt = max(dt, 0.0)
         for s in self.servers:
-            s.accrue(max(dt, 0.0))
+            s.accrue(dt)
+        if self.thermal_on and dt > 0.0:
+            tcfg = self.cfg.thermal
+            p = self._powers()
+            target = p * tcfg.r_th + self._inlet()
+            alpha = 1.0 - math.exp(-dt / tcfg.tau_th)
+            self.temp = self.temp + (target - self.temp) * alpha
+            self.t_peak = np.maximum(self.t_peak, self.temp)
+            thr_mask = np.asarray([s.throttled for s in self.servers])
+            self.throttle_seconds += thr_mask * dt
+            p_it = p.sum()
+            p_cool = p_it / self.cop
+            self.cool_energy += p_cool * dt
+            kw = (p_it + p_cool) * 1e-3
+            self.carbon_g += kw * _rate_integral(
+                tcfg.carbon_base, tcfg.carbon_swing, tcfg.carbon_period,
+                tcfg.carbon_phase, self.t, t_next) / 3600.0
+            self.cost += kw * _rate_integral(
+                tcfg.price_base, tcfg.price_swing, tcfg.price_period,
+                tcfg.price_phase, self.t, t_next) / 3600.0
+        if self.topo is not None and dt > 0.0:
+            for f in self.flows.values():
+                lat = min(f.extra, dt)
+                f.rem = max(f.rem - f.rate * (dt - lat), 0.0)
+                f.extra -= lat
         self.t = t_next
 
+    # ---- thermal throttling ------------------------------------------
+    def _throttling(self):
+        return self.thermal_on and self.cfg.thermal.t_throttle < INF / 2
+
+    def _next_thermal_crossing(self):
+        if not self._throttling():
+            return INF
+        tcfg = self.cfg.thermal
+        thr = tcfg.t_throttle
+        rel = min(tcfg.t_release, thr)
+        target = self._powers() * tcfg.r_th + self._inlet()
+        dt = INF
+        for i, s in enumerate(self.servers):
+            ti = self.temp[i]
+            if not s.throttled and ti < thr - TEMP_TOL and target[i] > thr:
+                dt = min(dt, tcfg.tau_th
+                         * math.log((target[i] - ti) / (target[i] - thr)))
+            if s.throttled and ti > rel + TEMP_TOL and target[i] < rel:
+                dt = min(dt, tcfg.tau_th
+                         * math.log((ti - target[i]) / (rel - target[i])))
+        if dt >= INF / 2:
+            return INF
+        return self.t + dt * (1.0 + _CROSS_EPS) + 1e-9
+
+    def _apply_throttle(self):
+        if not self._throttling():
+            return
+        tcfg = self.cfg.thermal
+        thr = tcfg.t_throttle
+        rel = min(tcfg.t_release, thr)
+        for i, s in enumerate(self.servers):
+            was = s.throttled
+            if not was and self.temp[i] >= thr - TEMP_TOL:
+                s.throttled = True
+            elif was and self.temp[i] <= rel + TEMP_TOL:
+                s.throttled = False
+            if s.throttled != was:
+                # stretch in-flight work about *now* by the freq ratio
+                f_old = tcfg.throttle_freq if was else 1.0
+                f_new = tcfg.throttle_freq if s.throttled else 1.0
+                ratio = f_old / f_new
+                for c in range(self.cfg.n_cores):
+                    if self.t < s.core_end[c] < INF:
+                        s.core_end[c] = self.t \
+                            + (s.core_end[c] - self.t) * ratio
+                        heapq.heappush(self.events,
+                                       (s.core_end[c], 0, "complete",
+                                        (i, c)))
+
+    # ---- scheduling / queues -----------------------------------------
     def _pick(self, load_snapshot):
         cfg = self.cfg
         if cfg.sched_policy == SchedPolicy.ROUND_ROBIN:
@@ -103,11 +262,59 @@ class OracleSim:
             self.rr = (srv + 1) % cfg.n_servers
             return srv
         scores = list(load_snapshot)
-        if cfg.sleep_policy == SleepPolicy.DUAL_TIMER:
+        if cfg.sched_policy == SchedPolicy.THERMAL_AWARE:
+            for i in range(cfg.n_servers):
+                scores[i] += (self.temp[i] - cfg.thermal.t_inlet) \
+                    * cfg.thermal.sched_temp_weight
+        elif cfg.sleep_policy == SleepPolicy.DUAL_TIMER:
             for i, s in enumerate(self.servers):
                 scores[i] += (1000.0 if getattr(s, "pool", 0) else 0.0)
         best = min(range(cfg.n_servers), key=lambda i: scores[i])
         return best
+
+    def _admit_chunk(self, jobs, T):
+        """Admit one chunk of same-timestamp jobs against a single farm
+        snapshot (the engine's batched admission), then enqueue the
+        chunk's roots in task-id order.  For score policies, each job's
+        committed roots count as load for the NEXT job's pick, matching
+        the engine's in-batch increments (and the old one-job-per-step
+        behavior, where roots drained between admits)."""
+        load_snapshot = [s.load() for s in self.servers]
+        roots = []
+        for j in jobs:
+            spec = self.specs[j]
+            nt = len(spec.service)
+            self.remaining[j] = nt
+            dep = {i: 0 for i in range(nt)}
+            kids = {i: [] for i in range(nt)}
+            byts = {}
+            for (p, c, b) in spec.edges:
+                dep[c] += 1
+                kids[p].append(c)
+                byts[(p, c)] = b
+            job_srv = None
+            for i in range(nt):
+                tid = j * T + i
+                self.task_service[tid] = float(spec.service[i])
+                job_srv = self._pick(load_snapshot)
+                self.task_server[tid] = job_srv
+                self.dep_count[tid] = dep[i]
+                self.children[tid] = [j * T + c for c in kids[i]]
+                self.child_bytes[tid] = {
+                    j * T + c: byts[(i, c)] for c in kids[i]}
+            # snapshot the root set BEFORE enqueuing: a root dropped by a
+            # full queue zeroes its children's dep_count, but those
+            # children are NOT roots (the engine marks roots once, at
+            # admit) — they enqueue via the deferred "ready" event
+            job_roots = [j * T + i for i in range(nt)
+                         if self.dep_count[j * T + i] == 0]
+            if job_srv is not None and \
+                    self.cfg.sched_policy != SchedPolicy.ROUND_ROBIN:
+                # score policies colocate a job's tasks on one pick
+                load_snapshot[job_srv] += len(job_roots)
+            roots += job_roots
+        for tid in roots:
+            self._enqueue(tid)
 
     def _try_start(self, srv):
         s = self.servers[srv]
@@ -116,7 +323,7 @@ class OracleSim:
         while s.queue and None in s.cores:
             c = s.cores.index(None)
             tid = s.queue.pop(0)
-            dur = self.task_service[tid] / self.cfg.core_freq
+            dur = self.task_service[tid] / s.freq()
             s.cores[c] = tid
             s.core_end[c] = self.t + dur
             heapq.heappush(self.events,
@@ -163,6 +370,45 @@ class OracleSim:
             heapq.heappush(self.events,
                            (self.t + s.tau, 2, "timer", (srv, self.t)))
 
+    # ---- fluid flow model (network mode) ------------------------------
+    def _spawn_or_drop_edge(self, src, dst, nbytes, ch):
+        """Edge needing a flow: allocate a slot or drop-resolve (engine's
+        flow-slot-exhaustion semantics — dep decremented immediately)."""
+        if len(self.flows) >= self.cfg.max_flows:
+            self.flows_dropped += 1
+            self.dep_count[ch] -= 1
+            if self.dep_count[ch] == 0:
+                self._enqueue(ch)
+            return
+        links = [int(li) for li in self.topo.routes[src, dst]
+                 if li >= 0]
+        fid = self.flow_seq
+        self.flow_seq += 1
+        self.flows[fid] = OracleFlow(src, dst, nbytes, ch, links)
+
+    def _recompute_rates(self):
+        if self.topo is None or not self.flows:
+            return
+        cap = self.topo.link_cap
+        count = np.zeros(self.topo.n_links, np.int64)
+        for f in self.flows.values():
+            count[f.links] += 1
+        for fid, f in self.flows.items():
+            f.rate = min(cap[li] / count[li] for li in f.links) \
+                if f.links else 0.0
+            if f.rate > 0:
+                f.done_at = self.t + f.extra + f.rem / f.rate
+                heapq.heappush(self.events, (f.done_at, 0, "flow", fid))
+            else:
+                f.done_at = INF
+
+    def _complete_flow(self, fid):
+        f = self.flows.pop(fid)
+        ch = f.child
+        self.dep_count[ch] -= 1
+        if self.dep_count[ch] == 0:
+            self._enqueue(ch)
+
     # ---- main loop ----------------------------------------------------
     def run(self):
         cfg = self.cfg
@@ -172,6 +418,7 @@ class OracleSim:
         self.task_server = {}
         self.dep_count = {}
         self.children = {}
+        self.child_bytes = {}
         self.remaining = {}
 
         for j, t in enumerate(self.arrivals):
@@ -183,36 +430,32 @@ class OracleSim:
             self._idle_edge(srv)
 
         while self.events:
+            # throttle-threshold crossings are events of their own: the
+            # engine solves the RC exponential for the crossing time
+            t_cross = self._next_thermal_crossing()
+            if t_cross < self.events[0][0]:
+                self._accrue_all(t_cross)
+                self._apply_throttle()
+                continue
+
             t_next, _, kind, payload = heapq.heappop(self.events)
             self._accrue_all(t_next)
+            self._apply_throttle()
 
             if kind == "arrive":
-                j = payload
-                spec = self.specs[j]
-                nt = len(spec.service)
-                self.remaining[j] = nt
-                load_snapshot = [s.load() for s in self.servers]
-                dep = {i: 0 for i in range(nt)}
-                kids = {i: [] for i in range(nt)}
-                for (p, c, b) in spec.edges:
-                    dep[c] += 1
-                    kids[p].append(c)
-                for i in range(nt):
-                    tid = j * T + i
-                    self.task_service[tid] = float(spec.service[i])
-                    self.task_server[tid] = self._pick(load_snapshot) \
-                        if cfg.sched_policy == SchedPolicy.ROUND_ROBIN \
-                        else self._pick(load_snapshot)
-                    self.dep_count[tid] = dep[i]
-                    self.children[tid] = [j * T + c for c in kids[i]]
-                # snapshot the root set BEFORE enqueuing: a root dropped by
-                # a full queue zeroes its children's dep_count, but those
-                # children are NOT roots (the engine marks roots once, at
-                # admit) — they enqueue via the deferred "ready" event
-                roots = [j * T + i for i in range(nt)
-                         if self.dep_count[j * T + i] == 0]
-                for tid in roots:
-                    self._enqueue(tid)
+                # the engine admits same-timestamp jobs in passes of
+                # cfg.arrivals_per_step, each against one scheduler
+                # snapshot, draining the chunk's roots before the next
+                # chunk — chunk the tied arrivals identically (exact as
+                # long as a chunk's root count fits ready_per_step, which
+                # drains fully before the next same-time admit step)
+                batch = [payload]
+                while self.events and self.events[0][0] == t_next \
+                        and self.events[0][2] == "arrive":
+                    batch.append(heapq.heappop(self.events)[3])
+                K = max(int(self.cfg.arrivals_per_step), 1)
+                for c0 in range(0, len(batch), K):
+                    self._admit_chunk(batch[c0:c0 + K], T)
 
             elif kind == "complete":
                 srv, c = payload
@@ -228,6 +471,12 @@ class OracleSim:
                 if self.remaining[j] == 0:
                     self.job_finish[j] = self.t
                 for ch in self.children[tid]:
+                    nbytes = self.child_bytes[tid].get(ch, 0.0)
+                    if self.topo is not None and nbytes > 0 \
+                            and self.task_server[ch] != srv:
+                        self._spawn_or_drop_edge(
+                            srv, self.task_server[ch], nbytes, ch)
+                        continue
                     self.dep_count[ch] -= 1
                     if self.dep_count[ch] == 0:
                         self._enqueue(ch)
@@ -259,6 +508,16 @@ class OracleSim:
 
             elif kind == "ready":
                 self._enqueue(payload)
+
+            elif kind == "flow":
+                f = self.flows.get(payload)
+                if f is None or f.done_at > self.t + 1e-9:
+                    continue                      # stale / rescheduled
+                self._complete_flow(payload)
+                if len(self.job_finish) == n_jobs:
+                    break
+
+            self._recompute_rates()
 
         return self
 

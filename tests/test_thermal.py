@@ -1,0 +1,270 @@
+"""Thermal/cooling & carbon-cost subsystem validation:
+
+  * jitted RC temperatures / cooling energy / carbon / cost match the
+    numpy reference integrator (tests/oracle.py) within f32 tolerance,
+    across sleep policies and throttling configs
+  * steady state: T -> T_inlet + P·r_th (closed-form fixed point)
+  * thermal.enabled=False and a coupling-free thermal run produce
+    bit-identical dynamics to each other (temperature tracking alone
+    must not perturb the simulation)
+  * throttling engages via a solved threshold-crossing event and
+    stretches in-flight work by the analytic amount
+  * THERMAL_AWARE placement matches the oracle and cools the peak
+  * telemetry window conservation for the new thermal columns
+  * vmapped replica sweeps carry the thermal stats
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import farm as farm_mod
+from repro.core import montecarlo, telemetry, thermal, topology, workload
+from repro.core.jobs import dag_single
+from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
+                              SrvState, TelemetryConfig, ThermalConfig)
+
+from oracle import OracleSim
+
+# hot parameters: a busy server (~84 W at one busy core) targets
+# ~22 + 84·0.5 = 64 °C with a 2 s time constant, so temperatures move on
+# the same scale as the workload
+HOT = dict(enabled=True, r_th=0.5, tau_th=2.0, t_inlet=22.0, recirc=0.2,
+           rack_size=3)
+
+
+def _workload(n_jobs=150, lam=60.0, seed=3, svc_seed=7, mean=0.02):
+    rng = np.random.default_rng(svc_seed)
+    arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
+    specs = [dag_single(rng.exponential(mean)) for _ in range(n_jobs)]
+    return arr, specs
+
+
+def _run_both(cfg, arr, specs, tau=None):
+    res = farm_mod.simulate(cfg, arr, specs, tau=tau)
+    orc = OracleSim(cfg, arr, specs, tau=tau).run()
+    return res, orc
+
+
+@pytest.mark.parametrize("policy,tau,throttle", [
+    (SleepPolicy.ALWAYS_ON, None, False),
+    (SleepPolicy.SINGLE_TIMER, 0.05, False),
+    (SleepPolicy.ALWAYS_ON, None, True),
+    (SleepPolicy.SINGLE_TIMER, 0.05, True),
+])
+def test_thermal_matches_numpy_oracle(policy, tau, throttle):
+    """Temperatures, cooling energy, carbon, and cost from the jitted
+    engine match the sequential numpy integrator within f32 tolerance."""
+    tcfg = ThermalConfig(**HOT,
+                         t_throttle=50.0 if throttle else INF,
+                         t_release=45.0 if throttle else INF,
+                         throttle_freq=0.5, throttle_power_scale=0.6,
+                         carbon_period=600.0, price_period=600.0)
+    cfg = SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
+                    sched_policy=SchedPolicy.LOAD_BALANCE,
+                    sleep_policy=policy, sleep_state=SrvState.S3,
+                    max_events=60_000, thermal=tcfg)
+    arr, specs = _workload()
+    res, orc = _run_both(cfg, arr, specs, tau=tau)
+
+    assert res.n_finished == len(arr) == len(orc.job_finish)
+    np.testing.assert_allclose(np.sort(res.latencies),
+                               np.sort(orc.latencies()),
+                               rtol=1e-3, atol=1e-4)
+    assert res.server_energy == pytest.approx(orc.total_energy(), rel=2e-3)
+    np.testing.assert_allclose(res.temps, orc.temp, rtol=2e-3, atol=5e-2)
+    np.testing.assert_allclose(res.peak_temps, orc.t_peak,
+                               rtol=2e-3, atol=5e-2)
+    assert res.cooling_energy == pytest.approx(orc.cool_energy, rel=2e-3)
+    assert res.carbon_g == pytest.approx(orc.carbon_g, rel=2e-3)
+    assert res.energy_cost == pytest.approx(orc.cost, rel=2e-3)
+    if throttle:
+        assert res.throttle_seconds > 0.0
+        assert res.throttle_seconds == pytest.approx(
+            orc.throttle_seconds.sum(), rel=5e-3, abs=1e-3)
+
+
+def test_steady_state_temperature():
+    """With recirculation off, a held power level converges to the RC
+    fixed point T_inlet + P·r_th."""
+    tcfg = ThermalConfig(enabled=True, r_th=0.5, tau_th=0.05, recirc=0.0)
+    cfg = SimConfig(n_servers=2, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=10_000,
+                    thermal=tcfg)
+    # one 5 s task on server 0 (100 time constants): both servers reach
+    # their fixed points long before it completes
+    res = farm_mod.simulate(cfg, np.asarray([0.0]), [dag_single(5.0)])
+    sp = cfg.server_power
+    p_busy = sp.p_base + sp.p_core_active            # 1 busy core of 1
+    p_idle = sp.p_base + sp.p_core_idle
+    busy_srv = int(np.argmax(res.temps))
+    assert res.peak_temps[busy_srv] == pytest.approx(
+        tcfg.t_inlet + p_busy * tcfg.r_th, rel=1e-4)
+    assert res.temps[1 - busy_srv] == pytest.approx(
+        tcfg.t_inlet + p_idle * tcfg.r_th, rel=1e-4)
+
+
+def test_tracking_only_thermal_is_bit_identical_to_disabled():
+    """Temperature *tracking* (no throttling, no thermal placement) must
+    not perturb the simulation at all: every non-thermal state leaf is
+    bit-identical to the thermal-disabled run."""
+    arr, specs = _workload(n_jobs=120)
+    base = SimConfig(n_servers=5, n_cores=2, max_jobs=128, tasks_per_job=1,
+                     sleep_policy=SleepPolicy.SINGLE_TIMER,
+                     sleep_state=SrvState.PKG_C6, max_events=40_000)
+    off = farm_mod.simulate(base, arr, specs, tau=0.05)
+    on = farm_mod.simulate(
+        dataclasses.replace(base, thermal=ThermalConfig(**HOT)),
+        arr, specs, tau=0.05)
+    assert off.events == on.events
+    np.testing.assert_array_equal(off.latencies, on.latencies)
+    np.testing.assert_array_equal(off.energy_per_server,
+                                  on.energy_per_server)
+    np.testing.assert_array_equal(off.residency, on.residency)
+    assert np.isnan(off.peak_temp) and on.peak_temp > HOT["t_inlet"]
+
+
+def test_throttle_crossing_is_exact():
+    """Single busy server, recirc off: the engine must throttle at the
+    analytic RC crossing time and the job must finish at the analytically
+    stretched completion time (the crossing is an *event*, not a check at
+    the next unrelated event)."""
+    tf = 0.5
+    tcfg = ThermalConfig(enabled=True, r_th=0.5, tau_th=1.0, recirc=0.0,
+                         t_throttle=50.0, t_release=40.0,
+                         throttle_freq=tf, throttle_power_scale=1.0)
+    cfg = SimConfig(n_servers=1, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=5_000,
+                    thermal=tcfg)
+    svc = 4.0
+    res = farm_mod.simulate(cfg, np.asarray([0.0]), [dag_single(svc)])
+    sp = cfg.server_power
+    target = tcfg.t_inlet + (sp.p_base + sp.p_core_active) * tcfg.r_th
+    t0 = tcfg.t_inlet
+    t_cross = tcfg.tau_th * math.log((target - t0)
+                                     / (target - tcfg.t_throttle))
+    expect = t_cross + (svc - t_cross) / tf
+    assert res.n_finished == 1
+    assert res.latencies[0] == pytest.approx(expect, rel=1e-3)
+    assert res.throttle_seconds == pytest.approx(
+        res.latencies[0] - t_cross, rel=1e-3)
+    # power_scale=1.0 keeps the heat on: temperature still tends to the
+    # RC target (throttling here slows work, it does not cool), bounded
+    # by the fixed point
+    assert tcfg.t_throttle < res.peak_temp <= target + 1e-2
+
+
+def test_tiny_crossing_at_large_t_makes_progress():
+    """ulp regression: at t ~ 86400 s (f32 ulp ~ 8 ms) a sub-ulp solved
+    crossing dt must not round t_cross back onto t and spin the frozen
+    clock to max_events — next_crossing forces at least one representable
+    tick of progress.
+
+    Scenario: the server idles at its 55.5 °C fixed point until a job
+    arrives at t=86400; the busy target is 61 °C and the threshold sits
+    3 mK above the idle temperature, so the solved crossing dt (~0.5 ms)
+    is far below ulp(86400)."""
+    tcfg = ThermalConfig(enabled=True, r_th=0.5, tau_th=1.0, recirc=0.0,
+                         t_throttle=55.503, t_release=55.0,
+                         throttle_freq=0.5)
+    cfg = SimConfig(n_servers=1, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=2_000,
+                    thermal=tcfg)
+    res = farm_mod.simulate(cfg, np.asarray([86400.0]), [dag_single(2.0)])
+    assert res.n_finished == 1
+    assert res.events < 200                      # no frozen-time spin
+    # throttle engaged just after the arrival, not during the long idle
+    assert 0.0 < res.throttle_seconds < 10.0
+
+
+def test_thermal_aware_matches_oracle_and_cools_peak():
+    """THERMAL_AWARE places on the coolest eligible server: it matches
+    the oracle's scoring and beats ROUND_ROBIN's peak temperature on an
+    asymmetric-rack farm (rack of 4 recirculates hotter than rack of 2)."""
+    tcfg = ThermalConfig(**{**HOT, "recirc": 0.6, "rack_size": 4})
+    cfg = SimConfig(n_servers=6, n_cores=1, max_jobs=256, tasks_per_job=1,
+                    sched_policy=SchedPolicy.THERMAL_AWARE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=60_000,
+                    thermal=tcfg)
+    arr, specs = _workload(n_jobs=120, lam=25.0, mean=0.08)
+    res, orc = _run_both(cfg, arr, specs)
+    assert res.n_finished == len(arr)
+    np.testing.assert_allclose(np.sort(res.latencies),
+                               np.sort(orc.latencies()),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(res.temps, orc.temp, rtol=2e-3, atol=5e-2)
+
+    rr = farm_mod.simulate(
+        dataclasses.replace(cfg, sched_policy=SchedPolicy.ROUND_ROBIN),
+        arr, specs)
+    assert res.peak_temp <= rr.peak_temp + 1e-3
+
+
+def test_thermal_window_conservation():
+    """The thermal telemetry columns integrate exactly: cooling power
+    windows sum to the CRAC energy and the carbon/cost windows sum to the
+    accumulated totals (both are closed-form interval integrals)."""
+    tcfg = ThermalConfig(**HOT, carbon_period=120.0, carbon_swing=0.5,
+                         price_period=120.0, price_swing=0.5)
+    cfg = SimConfig(n_servers=4, n_cores=2, max_jobs=256, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=40_000,
+                    thermal=tcfg,
+                    telemetry=TelemetryConfig(n_windows=64, window_dt=0.2))
+    arr, specs = _workload(n_jobs=150, lam=50.0)
+    res = farm_mod.simulate(cfg, arr, specs)
+    ts = res.telemetry
+    joules_cool = np.nansum(ts.cooling_power * ts.occupancy)
+    assert joules_cool == pytest.approx(res.cooling_energy, rel=1e-4)
+    assert ts.carbon_per_window.sum() == pytest.approx(res.carbon_g,
+                                                       rel=1e-4)
+    assert ts.cost_per_window.sum() == pytest.approx(res.energy_cost,
+                                                     rel=1e-4)
+    occ = ts.occupancy > 0
+    assert (ts.max_temp[occ] + 1e-3 >= ts.mean_temp[occ]).all()
+    # time-averaged carbon intensity stays inside the diurnal band
+    ci = ts.carbon_intensity[occ]
+    lo = tcfg.carbon_base * (1 - tcfg.carbon_swing) - 1e-3
+    hi = tcfg.carbon_base * (1 + tcfg.carbon_swing) + 1e-3
+    assert ((ci >= lo) & (ci <= hi)).all()
+
+
+def test_topology_rack_grouping():
+    """rack_of_servers groups by first-hop switch: fat-tree k=4 pods have
+    2-server edge racks; the star is one rack; CamCube falls back to
+    chunks."""
+    ft = topology.fat_tree(4)
+    racks = topology.rack_of_servers(ft)
+    _, counts = np.unique(racks, return_counts=True)
+    assert (counts == 2).all() and len(counts) == 8
+    st = topology.star(6)
+    assert len(np.unique(topology.rack_of_servers(st))) == 1
+    cc = topology.camcube(2, 2, 2)
+    assert len(np.unique(topology.rack_of_servers(cc, rack_size=4))) == 2
+
+
+def test_replica_sweep_carries_thermal_stats():
+    tcfg = ThermalConfig(**HOT, t_throttle=50.0, t_release=45.0)
+    cfg = SimConfig(n_servers=4, n_cores=2, max_jobs=64, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=20_000,
+                    thermal=tcfg)
+    n_jobs, R = 60, 3
+    rng = np.random.default_rng(0)
+    specs = [dag_single(rng.exponential(0.02)) for _ in range(n_jobs)]
+    arrs = np.stack([workload.poisson_arrivals(40.0, n_jobs, seed=s)
+                     for s in range(R)])
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs)
+    out = montecarlo.run_replicas(cfg, state_b, tc)
+    stats = montecarlo.replica_stats(out, cfg)
+    assert (stats["finished"] == n_jobs).all()
+    for key in ("cooling_energy", "carbon_g", "energy_cost", "peak_temp"):
+        assert stats[key].shape == (R,)
+        assert np.isfinite(stats[key]).all()
+    assert (stats["peak_temp"] > tcfg.t_inlet).all()
+    # replicas see different workloads -> different thermal outcomes
+    assert len(set(np.round(stats["carbon_g"], 6))) > 1
+    # solo run agrees with the vmapped replica
+    solo = farm_mod.simulate(cfg, arrs[0], specs)
+    assert stats["cooling_energy"][0] == pytest.approx(solo.cooling_energy,
+                                                       rel=1e-5)
+    assert stats["peak_temp"][0] == pytest.approx(solo.peak_temp, rel=1e-5)
