@@ -13,7 +13,8 @@ Semantics are identical to a heap-based DES — we always advance to the
 global minimum event time, so there is no time-discretization error.  The
 per-iteration work is O(state) streaming instead of O(log n) pointer
 chasing, which is exactly the trade the TPU wants; `kernels/dcsim_step.py`
-fuses the min-reduction + energy accrual of the hot loop into one VMEM pass.
+fuses the min-reduction + energy accrual + completion free of the hot loop
+into one VMEM pass (enabled with ``cfg.use_kernel``).
 
 Event sources:
   job arrival            jobs.arrival[arr_ptr]
@@ -21,16 +22,29 @@ Event sources:
   wake completion        min srv_wake_at
   delay-timer expiry     scheduler.next_timer_event
   flow completion        min flows.done_at          (network mode)
+  throttle crossing      thermal.next_crossing      (thermal throttling)
   pending work           t (now) when READY tasks await placement
 
+Macro-stepping (``cfg.events_per_step``): one jitted sim_step retires up
+to K successive event times.  The first K-1 run a CHEAP core — the full
+advance/wakeup/completion/admission/drain/start pipeline minus the
+expensive passes (flow completion + rate recompute, flow spawning,
+throttle-crossing handling, latency-histogram binning) — and a gate stops
+the chew whenever the pending event needs one of those, handing it to the
+full step that always closes the macro-step.  The gating is conservative,
+so final states are identical for every K; only the per-step event count
+changes.  Latency binning is deferred to once per macro-step (the finish
+arrays identify every completion since the macro began); window accrual
+stays exact per interval.
+
 Scheduling/assignment model: the global scheduler assigns servers to ALL
-tasks of a job at arrival (policy-driven, sequential over the job's <=T
-tasks).  When a parent task finishes, each DAG edge either decrements the
-child's dep_count immediately (no network / same server / zero bytes) or
-spawns a flow parent_server -> child_server; the flow's completion
-decrements it.  dep_count==0 turns a task READY; READY tasks are drained
-(bounded per step) into their server's local ring queue, waking sleeping
-servers on demand.
+tasks of a job at arrival (policy-driven).  When a parent task finishes,
+each DAG edge either decrements the child's dep_count immediately (no
+network / same server / zero bytes) or spawns a flow parent_server ->
+child_server; the flow's completion decrements it.  dep_count==0 turns a
+task READY; READY tasks are drained (bounded per step) into their server's
+task-major FIFO queue (status QUEUED + enqueue_seq stamp — see server.py),
+waking sleeping servers on demand.
 """
 from __future__ import annotations
 
@@ -75,20 +89,15 @@ def _next_arrival(jobs: JobTable) -> jnp.ndarray:
                      jobs.arrival[jnp.clip(jobs.arr_ptr, 0, J - 1)], INF)
 
 
-def next_event_time(state: SimState, cfg: SimConfig) -> jnp.ndarray:
+def _farm_candidates(state: SimState, cfg: SimConfig):
+    """Candidate next-event time from arrivals + farm sources, with the
+    READY/startable pin to ``now`` — everything the cheap core handles."""
     cands = [
         _next_arrival(state.jobs),
         state.farm.core_busy_until.min(),
         state.farm.srv_wake_at.min(),
         scheduler.next_timer_event(state.farm, cfg),
     ]
-    if cfg.has_network:
-        cands.append(state.flows.done_at.min())
-    if cfg.thermal.throttling:
-        # throttle-threshold crossings are real events: the RC exponential
-        # is solved for the crossing time, so throttling engages exactly
-        # when the temperature reaches it, not at the next unrelated event
-        cands.append(thermal_mod.next_crossing(state, cfg))
     t_next = functools.reduce(jnp.minimum, cands)
     # pending READY tasks (or queued work on awake free cores) execute "now"
     ready = (state.jobs.status == TaskStatus.READY).any()
@@ -98,6 +107,106 @@ def next_event_time(state: SimState, cfg: SimConfig) -> jnp.ndarray:
                  & (state.farm.core_busy_until >= INF).any(axis=1)).any()
     t_next = jnp.where(ready | startable, state.t, t_next)
     return jnp.maximum(t_next, state.t).astype(cfg.time_dtype)
+
+
+def next_event_time(state: SimState, cfg: SimConfig) -> jnp.ndarray:
+    t_next = _farm_candidates(state, cfg)
+    if cfg.has_network:
+        t_next = jnp.minimum(t_next, state.flows.done_at.min())
+    if cfg.thermal.throttling:
+        # throttle-threshold crossings are real events: the RC exponential
+        # is solved for the crossing time, so throttling engages exactly
+        # when the temperature reaches it, not at the next unrelated event
+        t_next = jnp.minimum(t_next, thermal_mod.next_crossing(state, cfg))
+    return jnp.maximum(t_next, state.t).astype(cfg.time_dtype)
+
+
+# ==========================================================================
+# interval advance (accrual phase)
+# ==========================================================================
+
+def _advance_interval(state: SimState, cfg: SimConfig, tc, t_next):
+    """Integrate everything over the piecewise-constant interval
+    [t, t_next) in one shared-pass sweep, then set t := t_next.
+
+    The per-server power, busy count, and state one-hot are computed ONCE
+    and shared by the energy/residency accrual, the telemetry window
+    columns, and the thermal RC integrator (the seed step recomputed them
+    in each subsystem).  With ``cfg.use_kernel`` the energy accrual +
+    completion free runs in the fused Pallas kernel."""
+    farm = state.farm
+    dt = t_next - state.t
+    dtf = dt.astype(jnp.float32)
+    telemetry_on = cfg.telemetry.enabled
+    thermal_on = cfg.thermal.enabled
+    throttled = state.thermal.throttled if thermal_on else None
+    need_p = telemetry_on or thermal_on or not cfg.use_kernel
+    p_busy = power.server_power(farm, cfg, throttled) if need_p else None
+    onehot = (farm.srv_state[:, None]
+              == jnp.arange(SrvState.NUM)[None, :]).astype(jnp.float32)
+    thermal_ctx = t_end = None
+    if thermal_on:
+        # one RC evaluation (recirculated inlet + exponential) shared by
+        # the telemetry temperature columns and the thermal integrator
+        tcfg = cfg.thermal
+        target = p_busy[0] * tcfg.r_th \
+            + thermal_mod.inlet_temps(state.thermal, tcfg)
+        alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
+        t_end = state.thermal.t_srv \
+            + (target - state.thermal.t_srv) * alpha
+        thermal_ctx = (target, alpha, t_end)
+
+    telem = state.telem
+    if telemetry_on:
+        # window metrics integrate the PRE-advance state over [t, t_next)
+        # (piecewise constant, same exactness as the energy accrual)
+        wvals = telemetry.window_values(state, cfg, dt, p_busy, onehot,
+                                        thermal_ctx)
+        widx = telemetry.window_index(state.t, dt, cfg.telemetry)
+        telem = replace(telem, win=telem.win.at[widx].add(wvals))
+
+    if cfg.use_kernel:
+        if cfg.time_dtype != jnp.float32:
+            raise ValueError(
+                "cfg.use_kernel requires time_dtype=float32: the fused "
+                "advance kernel computes in f32, and the core_busy_until "
+                "round-trip would silently destroy f64 precision")
+        from ..kernels import dcsim_step
+        sp = cfg.server_power
+        table = jnp.asarray([sp.p_base, sp.p_base, sp.p_pkg_c6, sp.p_s3,
+                             sp.p_off, sp.p_wake], jnp.float32)
+        thr = throttled if cfg.thermal.throttling else None
+        interp = jax.default_backend() != "tpu"
+        nb, _done, en, bs, _cand = dcsim_step.dcsim_advance(
+            farm.core_busy_until.astype(jnp.float32), farm.srv_state,
+            farm.energy, farm.busy_core_seconds, state.t, t_next, table,
+            sp.p_core_active, sp.p_core_idle,
+            farm.srv_wake_at.astype(jnp.float32),
+            farm.srv_idle_since.astype(jnp.float32),
+            farm.srv_tau.astype(jnp.float32), throttled=thr,
+            throttle_power_scale=cfg.thermal.throttle_power_scale,
+            interpret=interp)
+        farm = replace(farm,
+                       core_busy_until=nb.astype(cfg.time_dtype),
+                       energy=en, busy_core_seconds=bs,
+                       residency=farm.residency + onehot * dtf)
+    else:
+        farm = power.accrue_server_energy(farm, cfg, dt, p_busy, onehot)
+
+    net, flows = state.net, state.flows
+    if cfg.has_network:
+        net = power.accrue_switch_energy(net, cfg, dt)
+        # drain the fluid model over the interval (rates are piecewise
+        # constant, fixed at the last recompute)
+        flows = net_mod.advance_flows(flows, dt)
+    therm = state.thermal
+    if thermal_on:
+        p_sw = power.switch_power(net, cfg).sum() if cfg.has_network \
+            else jnp.float32(0.0)
+        therm = thermal_mod.advance(therm, cfg, p_busy[0], p_sw,
+                                    state.t, dt, t_new=t_end)
+    return replace(state, farm=farm, net=net, flows=flows, thermal=therm,
+                   telem=telem, t=t_next)
 
 
 # ==========================================================================
@@ -137,27 +246,25 @@ def _apply_wakeups(farm: ServerFarm, cfg, now):
 
 
 def _apply_completions(state: SimState, cfg: SimConfig, tc=None):
-    """Handle all cores whose busy_until <= now.  Marks tasks DONE, updates
+    """Handle all tasks whose task_end <= now.  Marks tasks DONE, updates
     job bookkeeping, and resolves DAG edges (immediate dep decrement or
     flow spawn).
 
-    Task-level bookkeeping is pure elementwise task-space math: a RUNNING
-    task with task_end <= now is complete (task_end was stamped with its
-    core's busy_until at start), so no core->task scatter is needed.  Only
-    the DAG-edge resolution still walks the completed cores, and it is
-    statically absent for single-task jobs and runtime-gated on "any core
-    finished" otherwise."""
+    Everything is elementwise in task space: a RUNNING task with
+    task_end <= now is complete (task_end was stamped with its core's
+    busy_until at start), and its DAG edges live on task rows too — no
+    core->task gather or scatter anywhere.  The core array just frees its
+    expired slots elementwise."""
     farm, jobs, flows, net = state.farm, state.jobs, state.flows, state.net
     now = state.t
     T = cfg.tasks_per_job
-    done_mask = farm.core_busy_until <= now                       # (N, C)
-    core_task = farm.core_task
 
-    # free the cores (elementwise)
+    # free the cores (elementwise; a no-op for slots the fused kernel
+    # already freed during the advance)
+    done_core = farm.core_busy_until <= now                       # (N, C)
     farm = replace(
         farm,
-        core_busy_until=jnp.where(done_mask, INF, farm.core_busy_until),
-        core_task=jnp.where(done_mask, -1, farm.core_task))
+        core_busy_until=jnp.where(done_core, INF, farm.core_busy_until))
 
     # mark DONE + record finish time (elementwise in task space)
     done_task = (jobs.status == TaskStatus.RUNNING) \
@@ -170,49 +277,56 @@ def _apply_completions(state: SimState, cfg: SimConfig, tc=None):
 
     if T > 1:
         jobs, flows, net = _resolve_done_edges(
-            jobs, flows, net, cfg, tc, done_mask, core_task, now)
+            jobs, flows, net, cfg, tc, done_task, now)
     return replace(state, farm=farm, jobs=jobs, flows=flows, net=net)
 
 
-def _resolve_done_edges(jobs, flows, net, cfg, tc, done_mask, core_task,
-                        now):
+def _resolve_done_edges(jobs, flows, net, cfg, tc, done_task, now):
     """DAG edges of tasks completed this step: immediate dep decrement or
-    flow spawn, then BLOCKED -> READY.  Single-task jobs have no edges, so
-    this is only traced for T > 1 and only runs when a core finished."""
-    T = cfg.tasks_per_job
+    flow spawn, then BLOCKED -> READY.  Works on the COMPLETING tasks'
+    rows only: at most N·C tasks can finish simultaneously (each RUNNING
+    task occupies a core), so when the task table is wider than the core
+    array the done set is first compacted into a (N·C,)-batch — exact,
+    not a heuristic — and all edge math runs on (Kd, D) rows.  (The seed
+    walked (N·C, D) core slots via a core->task gather; the task table
+    carries the same information without the gather.)  Single-task jobs
+    have no edges, so this is only traced for T > 1 and only runs when a
+    task finished."""
     JT = jobs.status.shape[0]
+    Kd = min(JT, cfg.n_servers * cfg.n_cores)
 
     def resolve(args):
         jobs, flows, net = args
-        tid = jnp.where(done_mask, core_task, -1)                 # (N, C)
-        flat_tid = tid.reshape(-1)
-        valid = flat_tid >= 0
-        safe_tid = jnp.clip(flat_tid, 0)
-        # scatter index with out-of-bounds sentinel: clipping -1 to 0
-        # would make every inactive core slot write a STALE value into
-        # task 0 (duplicate scatter .set is non-deterministic);
-        # mode="drop" discards them instead
-        sc_tid = jnp.where(valid, flat_tid, JT)
-
-        ch = jobs.children[safe_tid]                              # (NC, D)
-        eb = jobs.edge_bytes[safe_tid]
-        ch_valid = (ch >= 0) & valid[:, None] & ~jobs.edge_sent[safe_tid]
-        edge_sent = jobs.edge_sent.at[sc_tid].set(
-            jobs.edge_sent[safe_tid] | ch_valid, mode="drop")
+        if Kd < JT:
+            tid_b, valid_b, _ = server.compact_mask(done_task, Kd)
+            tq = jnp.clip(tid_b, 0)
+            ch = jobs.children[tq]                                # (Kd, D)
+            eb = jobs.edge_bytes[tq]
+            ch_valid = (ch >= 0) & valid_b[:, None] \
+                & ~jobs.edge_sent[tq]
+            edge_sent = jobs.edge_sent.at[
+                jnp.where(valid_b, tid_b, JT)].set(
+                jobs.edge_sent[tq] | ch_valid, mode="drop")
+            src_of = jobs.server[tq]                              # (Kd,)
+        else:
+            ch = jobs.children                                    # (JT, D)
+            eb = jobs.edge_bytes
+            ch_valid = (ch >= 0) & done_task[:, None] & ~jobs.edge_sent
+            edge_sent = jobs.edge_sent | ch_valid
+            src_of = jobs.server
 
         dep_count = jobs.dep_count
         if cfg.has_network:
             # same-server or zero-byte edges resolve immediately; others
             # spawn flows parent_server -> child_server
-            src_srv = jobs.server[safe_tid]                       # (NC,)
-            dst_srv = jobs.server[jnp.clip(ch, 0)]                # (NC, D)
-            needs_flow = ch_valid & (eb > 0) & (dst_srv != src_srv[:, None])
+            dst_srv = jobs.server[jnp.clip(ch, 0)]                # (Kd, D)
+            needs_flow = ch_valid & (eb > 0) & (dst_srv != src_of[:, None])
             immediate = ch_valid & ~needs_flow
             dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
                 -immediate.reshape(-1).astype(jnp.int32), mode="drop")
 
             flat = needs_flow.reshape(-1)
-            f_src = jnp.broadcast_to(src_srv[:, None], ch.shape).reshape(-1)
+            f_src = jnp.broadcast_to(src_of[:, None], ch.shape).reshape(-1)
             f_dst = dst_srv.reshape(-1)
             f_bytes = eb.reshape(-1)
             f_child = ch.reshape(-1)
@@ -260,7 +374,7 @@ def _resolve_done_edges(jobs, flows, net, cfg, tc, done_mask, core_task,
                        edge_sent=edge_sent)
         return jobs, flows, net
 
-    return jax.lax.cond(done_mask.any(), resolve, lambda a: a,
+    return jax.lax.cond(done_task.any(), resolve, lambda a: a,
                         (jobs, flows, net))
 
 
@@ -438,9 +552,10 @@ def _drain_ready(state: SimState, cfg: SimConfig):
 
 
 def _drain_ready_batched(state: SimState, cfg: SimConfig):
-    """One multi-push: rank the first K READY tasks per destination server
-    and write them into ring-queue slots with a single scatter.  The whole
-    pass is gated on "any READY task" so quiet steps stay free."""
+    """One multi-push: the first K READY tasks become QUEUED with FIFO
+    stamps written elementwise into their own task rows (no ring-slot
+    scatter).  The whole pass is gated on "any READY task" so quiet steps
+    stay free."""
     is_ready = state.jobs.status == TaskStatus.READY
 
     def drain(state):
@@ -455,7 +570,7 @@ def _drain_ready_batched(state: SimState, cfg: SimConfig):
         valid = tids >= 0
         srv = jnp.where(valid, jobs.server[jnp.clip(tids, 0)], -1)
 
-        farm, ok = server.queue_push_many(farm, cfg, srv, tids, valid)
+        farm, ok, seq = server.queue_push_many(farm, cfg, srv, tids, valid)
         dest = jnp.zeros((cfg.n_servers,), bool).at[
             jnp.where(valid, srv, cfg.n_servers)].set(True, mode="drop")
         farm = server.begin_wake_mask(farm, cfg, dest, state.t)
@@ -463,7 +578,10 @@ def _drain_ready_batched(state: SimState, cfg: SimConfig):
         sc = jnp.where(valid, tids, JT)
         status = jobs.status.at[sc].set(
             jnp.where(ok, TaskStatus.QUEUED, TaskStatus.DONE), mode="drop")
-        state = replace(state, jobs=replace(jobs, status=status), farm=farm)
+        enq = jobs.enqueue_seq.at[jnp.where(valid & ok, tids, JT)].set(
+            seq, mode="drop")
+        state = replace(state, jobs=replace(jobs, status=status,
+                                            enqueue_seq=enq), farm=farm)
         dropped = jnp.zeros((JT,), bool).at[
             jnp.where(valid & ~ok, tids, JT)].set(True, mode="drop")
         return _resolve_drops(state, cfg, dropped)
@@ -484,11 +602,13 @@ def _drain_ready_scalar(state: SimState, cfg: SimConfig):
 
         def do(st):
             jobs, farm = st.jobs, st.farm
-            farm2, ok = server.queue_push(farm, cfg, srv, tid)
+            farm2, ok, seq = server.queue_push(farm, cfg, srv, tid)
             farm2 = server.begin_wake(farm2, cfg, srv, st.t)
             status = jobs.status.at[tid].set(
                 jnp.where(ok, TaskStatus.QUEUED, TaskStatus.DONE))
-            jobs2 = replace(jobs, status=status)
+            enq = jobs.enqueue_seq.at[tid].set(
+                jnp.where(ok, seq, jobs.enqueue_seq[tid]))
+            jobs2 = replace(jobs, status=status, enqueue_seq=enq)
             return replace(st, jobs=jobs2, farm=farm2)
 
         return jax.lax.cond(any_ready, do, lambda s: s, st)
@@ -502,83 +622,23 @@ def _drain_ready_scalar(state: SimState, cfg: SimConfig):
 
 def _start_tasks(state: SimState, cfg: SimConfig):
     # throttled servers start work at their reduced effective frequency;
-    # freq=None keeps the seed scalar expression when thermal is off
+    # freq=None keeps the untrottled scalar expression when thermal is off
     freq = thermal_mod.effective_freq(state.thermal, cfg) \
         if cfg.thermal.throttling else None
-    farm, started = server.try_start(
-        state.farm, cfg, state.jobs.service, state.t, freq)
-    sid = started.reshape(-1)
-    JT = state.jobs.status.shape[0]
-    sc = jnp.where(sid >= 0, sid, JT)          # drop-sentinel (see above)
-
-    def stamp(jobs):
-        status = jobs.status.at[sc].set(TaskStatus.RUNNING, mode="drop")
-        # stamp the core's busy_until so completion resolves elementwise
-        task_end = jobs.task_end.at[sc].set(
-            farm.core_busy_until.reshape(-1), mode="drop")
-        return replace(jobs, status=status, task_end=task_end)
-
-    jobs = jax.lax.cond((sid >= 0).any(), stamp, lambda j: j, state.jobs)
+    farm, jobs = server.try_start(state.farm, cfg, state.jobs, state.t,
+                                  freq)
     return replace(state, farm=farm, jobs=jobs)
 
 
-# ==========================================================================
-# the step
-# ==========================================================================
-
-def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
-    t_next = next_event_time(state, cfg)
-    # a t_next at the INF sentinel means "no pending events": freeze time
-    # (the done check below will terminate the loop) instead of integrating
-    # energy over an unbounded interval
-    t_next = jnp.where(t_next >= INF / 2, state.t, t_next)
-    dt = t_next - state.t
-
-    telemetry_on = cfg.telemetry.enabled
-    if telemetry_on:
-        # window metrics integrate the PRE-advance state over [t, t_next)
-        # (piecewise constant, same exactness as the energy accrual);
-        # finish arrays are captured so the INF -> finite transition below
-        # identifies this step's completions.
-        wvals = telemetry.window_values(state, cfg, dt)
-        widx = telemetry.window_index(state.t, dt, cfg.telemetry)
-        old_job_finish = state.jobs.job_finish
-        old_task_finish = state.jobs.finish
-
-    thermal_on = cfg.thermal.enabled
-    p_busy = None
-    if thermal_on:
-        # one evaluation of the (throttle-scaled) per-server power feeds
-        # both the exact energy accrual and the thermal RC integrator
-        p_busy = power.server_power(state.farm, cfg,
-                                    state.thermal.throttled)
-
-    farm = power.accrue_server_energy(state.farm, cfg, dt, p_busy)
-    net, flows = state.net, state.flows
-    if cfg.has_network:
-        net = power.accrue_switch_energy(net, cfg, dt)
-        # drain the fluid model over the interval (rates are piecewise
-        # constant, fixed at the last recompute): without this, bytes
-        # never drained and every intervening event pushed done_at later
-        flows = net_mod.advance_flows(flows, dt)
-    therm = state.thermal
-    if thermal_on:
-        p_sw = power.switch_power(net, cfg).sum() if cfg.has_network \
-            else jnp.float32(0.0)
-        therm = thermal_mod.advance(therm, cfg, p_busy[0], p_sw,
-                                    state.t, dt)
-    state = replace(state, farm=farm, net=net, flows=flows, thermal=therm,
-                    t=t_next)
-
-    if cfg.thermal.throttling:
-        # hysteresis latch + in-flight stretch; cond-gated on "any flip"
-        farm, jobs, therm = thermal_mod.apply_throttle(
-            state.farm, state.jobs, state.thermal, cfg, state.t)
-        state = replace(state, farm=farm, jobs=jobs, thermal=therm)
-
+def _apply_events(state: SimState, cfg: SimConfig, tc, cheap: bool):
+    """The event-application pipeline at the (already advanced) time
+    state.t.  ``cheap`` statically trims the passes the macro-step gating
+    guarantees are not needed: flow completions (gated: t < min done_at)
+    and the rate recompute (the active-flow set cannot change during a
+    cheap event — no spawns, no completions — so rates stay valid)."""
     state = replace(state, farm=_apply_wakeups(state.farm, cfg, state.t))
     state = _apply_completions(state, cfg, tc)
-    if cfg.has_network:
+    if cfg.has_network and not cheap:
         state = _apply_flow_completions(state, cfg)
     state = _apply_arrival(state, cfg, tc)
     state = _drain_ready(state, cfg)
@@ -595,23 +655,124 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     state = replace(state, farm=farm, sched=sched)
 
     if cfg.has_network:
-        # rate recomputation is only needed while flows are in flight —
-        # gate the (F, H) pass.  The no-flow branch must still ZERO
-        # link_flows (recompute_rates would): reusing last step's counts
-        # would pin ports ACTIVE forever after the final flow completes.
-        flows, link_flows = jax.lax.cond(
-            state.flows.active.any(),
-            lambda args: net_mod.recompute_rates(args[0], tc, state.t),
-            lambda args: (args[0], jnp.zeros_like(args[1])),
-            (state.flows, state.net.link_flows))
-        net = net_mod.update_switch_states(state.net, link_flows, tc,
-                                           cfg, state.t)
-        state = replace(state, flows=flows, net=net)
+        if cheap:
+            # the flow set is unchanged (gating), so rates and link_flows
+            # stay valid — but ports/linecards still enter LPI on idle
+            # timeouts, which is a function of *time*, not of flow events
+            net = net_mod.update_switch_states(
+                state.net, state.net.link_flows, tc, cfg, state.t)
+            state = replace(state, net=net)
+        else:
+            # rate recomputation is only needed while flows are in flight —
+            # gate the (F, H) pass.  The no-flow branch must still ZERO
+            # link_flows (recompute_rates would): reusing last step's
+            # counts would pin ports ACTIVE forever after the final flow
+            # completes.
+            flows, link_flows = jax.lax.cond(
+                state.flows.active.any(),
+                lambda args: net_mod.recompute_rates(args[0], tc, state.t),
+                lambda args: (args[0], jnp.zeros_like(args[1])),
+                (state.flows, state.net.link_flows))
+            net = net_mod.update_switch_states(state.net, link_flows, tc,
+                                               cfg, state.t)
+            state = replace(state, flows=flows, net=net)
+    return state
 
-    if telemetry_on:
-        state = replace(state, telem=telemetry.accumulate(
-            state.telem, cfg, state.jobs, old_job_finish, old_task_finish,
-            widx, wvals))
+
+# ==========================================================================
+# the step
+# ==========================================================================
+
+def _cheap_gate(state: SimState, cfg: SimConfig):
+    """(consume?, t_next) for one cheap event: the pending event time,
+    restricted to the sources the cheap core handles (arrival, task
+    completion, wakeup, timer, pending READY work).  ``consume`` is False
+    whenever the full step is needed first: a flow completes at or before
+    t_next, a completing task would resolve network edges (flow spawn +
+    rate recompute), a throttle crossing fires, nothing is pending, or
+    consuming the event would finish the simulation (the one-event loop
+    sets ``done`` in the same step as the last completion and never
+    processes trailing sleep-timer events — the last completion must
+    therefore reach the full step, which owns the done check)."""
+    t_next = _farm_candidates(state, cfg)
+    jobs = state.jobs
+    will_be_done = (~jobs.valid | (jobs.status == TaskStatus.DONE)
+                    | ((jobs.status == TaskStatus.RUNNING)
+                       & (jobs.task_end <= t_next))).all() \
+        & (_next_arrival(jobs) >= INF)
+    if cfg.has_network:
+        will_be_done = will_be_done & ~state.flows.active.any()
+    ok = (t_next < INF / 2) & ~will_be_done
+    if cfg.has_network:
+        ok = ok & (t_next < state.flows.done_at.min())
+        if cfg.tasks_per_job > 1:
+            # a completing task whose unsent edges all resolve locally
+            # (same server / zero bytes) is still cheap — the in-core
+            # edge resolver handles immediate edges; only an edge that
+            # would SPAWN a flow (and force a rate recompute) stops the
+            # chew.  Colocating policies (case D) therefore coalesce
+            # their chain completions.
+            jobs = state.jobs
+            will_done = (jobs.status == TaskStatus.RUNNING) \
+                & (jobs.task_end <= t_next)
+            unsent = (jobs.children >= 0) & ~jobs.edge_sent
+            dst = jobs.server[jnp.clip(jobs.children, 0)]     # (JT, D)
+            spawns = unsent & (jobs.edge_bytes > 0) \
+                & (dst != jobs.server[:, None])
+            ok = ok & ~(will_done[:, None] & spawns).any()
+    if cfg.thermal.throttling:
+        ok = ok & (t_next < thermal_mod.next_crossing(state, cfg))
+    return ok, t_next
+
+
+def _consume_cheap(state: SimState, cfg: SimConfig, tc, t_next):
+    state = _advance_interval(state, cfg, tc, t_next)
+    if cfg.thermal.throttling:
+        # hysteresis latch + in-flight stretch; cond-gated on "any flip"
+        farm, jobs, therm = thermal_mod.apply_throttle(
+            state.farm, state.jobs, state.thermal, cfg, state.t)
+        state = replace(state, farm=farm, jobs=jobs, thermal=therm)
+    state = _apply_events(state, cfg, tc, cheap=True)
+    return replace(state, events=state.events + 1)
+
+
+def _macro_chew(state: SimState, cfg: SimConfig, tc):
+    """Retire up to events_per_step - 1 cheap events in a bounded inner
+    while_loop; stops early when the gate demands the full step."""
+    K = cfg.events_per_step - 1
+
+    def cond(carry):
+        _, k, ok = carry
+        return ok & (k < K)
+
+    def body(carry):
+        state, k, _ = carry
+        ok, t_next = _cheap_gate(state, cfg)
+        state = jax.lax.cond(
+            ok, lambda s: _consume_cheap(s, cfg, tc, t_next),
+            lambda s: s, state)
+        return state, k + 1, ok
+
+    state, _, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), jnp.int32), jnp.asarray(True)))
+    return state
+
+
+def _full_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
+    t_next = next_event_time(state, cfg)
+    # a t_next at the INF sentinel means "no pending events": freeze time
+    # (the done check below will terminate the loop) instead of integrating
+    # energy over an unbounded interval
+    t_next = jnp.where(t_next >= INF / 2, state.t, t_next)
+    state = _advance_interval(state, cfg, tc, t_next)
+
+    if cfg.thermal.throttling:
+        # hysteresis latch + in-flight stretch; cond-gated on "any flip"
+        farm, jobs, therm = thermal_mod.apply_throttle(
+            state.farm, state.jobs, state.thermal, cfg, state.t)
+        state = replace(state, farm=farm, jobs=jobs, thermal=therm)
+
+    state = _apply_events(state, cfg, tc, cheap=False)
 
     all_done = (~state.jobs.valid
                 | (state.jobs.status == TaskStatus.DONE)).all() \
@@ -619,6 +780,26 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     if cfg.has_network:
         all_done = all_done & ~state.flows.active.any()
     return replace(state, events=state.events + 1, done=all_done)
+
+
+def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
+    """One macro-step: chew up to events_per_step - 1 cheap events, then
+    one full step; latency/QoS binning runs once over everything that
+    finished since the macro began (the INF -> finite finish transitions
+    identify them, independent of which inner step stamped them)."""
+    telemetry_on = cfg.telemetry.enabled
+    if telemetry_on:
+        old_job_finish = state.jobs.job_finish
+        old_task_finish = state.jobs.finish
+
+    if cfg.events_per_step > 1:
+        state = _macro_chew(state, cfg, tc)
+    state = _full_step(state, cfg, tc)
+
+    if telemetry_on:
+        state = replace(state, telem=telemetry.accumulate_finishes(
+            state.telem, cfg, state.jobs, old_job_finish, old_task_finish))
+    return state
 
 
 def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
@@ -661,7 +842,11 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def run(state: SimState, cfg: SimConfig, tc=None) -> SimState:
-    """Run to completion (or cfg.max_events) under lax.while_loop."""
+    """Run to completion (or cfg.max_events) under lax.while_loop.
+
+    With macro-stepping (cfg.events_per_step > 1) the event budget is
+    checked between macro-steps, so a run may retire up to
+    events_per_step - 1 events past max_events before stopping."""
     def cond(s):
         return (~s.done) & (s.events < cfg.max_events)
 

@@ -112,6 +112,7 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
         status=jnp.asarray(status.reshape(-1), jnp.int32),
         edge_sent=jnp.asarray(children.reshape(J * T, D) < 0),
         server=jnp.full((J * T,), -1, jnp.int32),
+        enqueue_seq=jnp.zeros((J * T,), jnp.int32),
         task_end=jnp.full((J * T,), INF, cfg.time_dtype),
         finish=jnp.full((J * T,), INF, cfg.time_dtype),
         job_finish=jnp.full((J,), INF, cfg.time_dtype),

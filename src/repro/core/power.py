@@ -49,18 +49,20 @@ def server_power(farm: ServerFarm, cfg: SimConfig, throttled=None):
 
 
 def accrue_server_energy(farm: ServerFarm, cfg: SimConfig, dt,
-                         p_busy=None) -> ServerFarm:
+                         p_busy=None, onehot=None) -> ServerFarm:
     """Exact interval accrual.  ``p_busy`` optionally supplies a
-    precomputed (power, busy) pair (the thermal path computes it once and
-    shares it with the RC integrator)."""
+    precomputed (power, busy) pair and ``onehot`` a precomputed (N, NUM)
+    state one-hot (the engine's advance computes both once and shares
+    them with the telemetry windows and the thermal RC integrator)."""
     p, busy = server_power(farm, cfg) if p_busy is None else p_busy
     dtf = dt.astype(jnp.float32)
     energy = farm.energy + p * dtf
     # one-hot add, not .at[arange(N), state].add: XLA:CPU lowers scatters
     # to a scalar update loop (~30us for 512 rows) while the (N, NUM)
     # elementwise form stays vectorized
-    onehot = (farm.srv_state[:, None]
-              == jnp.arange(SrvState.NUM)[None, :]).astype(jnp.float32)
+    if onehot is None:
+        onehot = (farm.srv_state[:, None]
+                  == jnp.arange(SrvState.NUM)[None, :]).astype(jnp.float32)
     residency = farm.residency + onehot * dtf
     busy_s = farm.busy_core_seconds + busy * dtf
     return replace(farm, energy=energy, residency=residency,

@@ -1,40 +1,51 @@
 """Server model primitives (paper §III-A).
 
 Each server: C cores (one task per core, paper's processing-unit model), a
-local FIFO ring queue, and a hierarchical ACPI power state.  All operations
-are dense/masked over the whole farm — no per-server control flow.
+local FIFO queue, and a hierarchical ACPI power state.  All operations are
+dense/masked over the whole farm — no per-server control flow.
+
+Queue representation is TASK-MAJOR: a queued task is simply a task with
+``status == QUEUED``; its FIFO position is the global ``enqueue_seq`` stamp
+it received on push, and the farm only keeps a per-server occupancy counter
+(``q_len``) plus the global stamp counter (``q_seq``).  Pushes stamp
+sequence numbers elementwise in task space and starts resolve FIFO order by
+ranking queued tasks per server — there is no (N, Q) ring to scatter slots
+into or gather task ids out of, which removes the two core->task scatters
+per starting step and all ring-buffer state from the hot loop.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .types import INF, CoreState, ServerFarm, SimConfig, SrvState, replace
+from .types import (INF, JobTable, ServerFarm, SimConfig, SrvState,
+                    TaskStatus, replace)
 
-__all__ = ["queue_push", "queue_push_many", "try_start", "wake_latency",
-           "begin_wake", "begin_wake_mask", "refresh_idle_state"]
+__all__ = ["queue_push", "queue_push_many", "queued_rank", "compact_mask",
+           "try_start", "wake_latency", "begin_wake", "begin_wake_mask",
+           "refresh_idle_state"]
 
 
 def queue_push(farm: ServerFarm, cfg: SimConfig, server, tid):
-    """Push one task id onto ``server``'s local ring queue.  Returns
-    (farm, ok).  Scalar server/tid (engine drains READY tasks K per step)."""
-    Q = cfg.local_q
-    full = farm.q_len[server] >= Q
-    slot = (farm.q_head[server] + farm.q_len[server]) % Q
-    q_tasks = farm.q_tasks.at[server, slot].set(
-        jnp.where(full, farm.q_tasks[server, slot], tid))
+    """Push one task onto ``server``'s queue (scalar args; the seed
+    reference drain path).  Returns (farm, ok, seq): ``seq`` is the FIFO
+    stamp the caller writes into ``jobs.enqueue_seq[tid]`` when ok."""
+    full = farm.q_len[server] >= cfg.local_q
     q_len = farm.q_len.at[server].add(jnp.where(full, 0, 1))
+    q_seq = farm.q_seq + jnp.where(full, 0, 1).astype(jnp.int32)
     dropped = farm.dropped + jnp.where(full, 1, 0).astype(jnp.int32)
-    return replace(farm, q_tasks=q_tasks, q_len=q_len, dropped=dropped), ~full
+    return (replace(farm, q_len=q_len, q_seq=q_seq, dropped=dropped),
+            ~full, farm.q_seq)
 
 
 def queue_push_many(farm: ServerFarm, cfg: SimConfig, servers, tids, valid):
-    """Push up to K tasks onto their servers' ring queues in one scatter.
+    """Push up to K tasks onto their servers' queues in one pass.
 
     servers/tids (K,) int32, valid (K,) bool.  Tasks destined to the same
-    server land in q slots in position order (matching K sequential
+    server take FIFO stamps in position order (matching K sequential
     queue_push calls); once a queue fills, later same-server tasks drop.
-    Returns (farm, ok (K,) bool).
+    Returns (farm, ok (K,) bool, seq (K,) int32 — the stamp for each
+    accepted task, garbage where ~ok).
     """
     K = tids.shape[0]
     N, Q = cfg.n_servers, cfg.local_q
@@ -43,15 +54,15 @@ def queue_push_many(farm: ServerFarm, cfg: SimConfig, servers, tids, valid):
     pos = jnp.arange(K)
     same = valid[None, :] & valid[:, None] & (s[None, :] == s[:, None])
     rank = jnp.sum(same & (pos[None, :] < pos[:, None]), axis=1)
-    # sequential equivalence: drops only start once the queue is full, so
-    # accepted ranks are contiguous and slots need no compaction
+    # sequential equivalence: drops only start once the queue is full
     ok = valid & (farm.q_len[s] + rank < Q)
-    slot = (farm.q_head[s] + farm.q_len[s] + rank) % Q
+    seq = farm.q_seq + jnp.cumsum(ok.astype(jnp.int32)) - 1
     row = jnp.where(ok, s, N)                       # drop-sentinel row
-    q_tasks = farm.q_tasks.at[row, slot].set(tids, mode="drop")
     q_len = farm.q_len.at[row].add(1, mode="drop")
+    q_seq = farm.q_seq + ok.sum().astype(jnp.int32)
     dropped = farm.dropped + (valid & ~ok).sum().astype(jnp.int32)
-    return replace(farm, q_tasks=q_tasks, q_len=q_len, dropped=dropped), ok
+    return (replace(farm, q_len=q_len, q_seq=q_seq, dropped=dropped),
+            ok, seq)
 
 
 def wake_latency(cfg: SimConfig, state):
@@ -90,42 +101,156 @@ def begin_wake_mask(farm: ServerFarm, cfg: SimConfig, mask, now):
         wake_count=farm.wake_count + sleeping.astype(jnp.int32))
 
 
-def try_start(farm: ServerFarm, cfg: SimConfig, service, now, freq=None):
-    """Start as many queued tasks as there are free cores, in ONE masked
-    pass: the r-th free core of each awake server takes the r-th queue
-    entry, for r < min(free cores, queue length).  Identical to the seed's
-    C sequential pop rounds but with zero scatters — the core arrays are
-    rebuilt with elementwise where (XLA:CPU scatters serialize).
+def queued_rank(jobs: JobTable, cfg: SimConfig, queued):
+    """(JT,) FIFO rank of each queued task among the queued tasks of ITS
+    server (0 = head), by enqueue_seq; garbage where ~queued.
+
+    One argsort by (server, seq) makes same-server tasks contiguous in
+    FIFO order, so the rank is position minus the server run's first
+    position — O(JT log JT) in task space, independent of N and with only
+    JT-row scatters (vs the (N, Q) ring's core-space gathers/scatters).
+    """
+    JT = queued.shape[0]
+    N = cfg.n_servers
+    srv = jnp.clip(jobs.server, 0)
+    # lexicographic (server, seq) sort via two STABLE argsorts — a fused
+    # srv*(JT+1)+seq key would overflow int32 once n_servers·JT passes
+    # 2^31 (a 20K-server farm with a ~100K-task table); seq (< JT) and
+    # srv (< N) are individually safe
+    imax = jnp.iinfo(jnp.int32).max
+    by_seq = jnp.argsort(jnp.where(queued, jobs.enqueue_seq, imax))
+    order = by_seq[jnp.argsort(
+        jnp.where(queued[by_seq], srv[by_seq], imax), stable=True)]
+    srv_o = jnp.where(queued[order], srv[order], N)     # sentinel last
+    first = jnp.full((N,), JT, jnp.int32).at[srv_o].min(
+        jnp.arange(JT, dtype=jnp.int32), mode="drop")
+    rank_o = jnp.arange(JT, dtype=jnp.int32) \
+        - first[jnp.clip(srv_o, 0, N - 1)]
+    return jnp.zeros((JT,), jnp.int32).at[order].set(rank_o)
+
+
+def compact_mask(mask, K: int):
+    """Gather the first K set task ids of ``mask`` (JT,) into a (K,)
+    batch in ascending-tid order: one cumsum + one K-slot scatter.
+    Returns (tids (K,), valid (K,), covered — True iff mask.sum() <= K,
+    i.e. the batch holds EVERY set task)."""
+    JT = mask.shape[0]
+    r = jnp.cumsum(mask) - 1
+    sel = mask & (r < K)
+    tids = jnp.full((K,), -1, jnp.int32).at[jnp.where(sel, r, K)].set(
+        jnp.arange(JT, dtype=jnp.int32), mode="drop")
+    return tids, tids >= 0, r[-1] < K
+
+
+# compact-batch size for start resolution: when at most this many tasks
+# are QUEUED farm-wide (the overwhelmingly common case — drains are
+# bounded by ready_per_step and starts immediately consume what they
+# push), FIFO ranks come from a pairwise comparison inside a compacted
+# batch; only genuinely congested steps pay the full-JT argsort rank
+COMPACT_Q = 128
+
+
+def try_start(farm: ServerFarm, cfg: SimConfig, jobs: JobTable, now,
+              freq=None):
+    """Start as many queued tasks as there are free cores, FIFO per
+    server, in one task-space pass.
+
+    Task-side bookkeeping (status -> RUNNING, task_end stamp) is fully
+    elementwise in task space: a queued task starts iff its per-server
+    FIFO rank is below its server's free-core count.  The core array is
+    rebuilt from a (server, rank) -> task table (one small scatter)
+    instead of the seed's (N, Q) ring gather + two (N·C)-row core->task
+    scatters, which serialized on XLA:CPU.
+
+    FIFO ranks normally come from a COMPACT_Q-wide gathered batch via a
+    pairwise count (queues are near-empty in steady state); steps with
+    more queued tasks than that fall back to the full argsort rank.
+    Both paths define the identical rank, so the runtime choice never
+    changes the dynamics.
 
     ``freq`` (N,) optionally overrides the scalar cfg.core_freq with a
     per-server effective frequency (thermal throttling); None keeps the
-    seed expression bit-exact.
+    untrottled expression bit-exact.
 
-    Returns (farm, started_tids (N, C), -1 where no start) so the engine
-    can flip task statuses."""
-    N, C, Q = cfg.n_servers, cfg.n_cores, cfg.local_q
+    Returns (farm, jobs).
+    """
+    N, C = cfg.n_servers, cfg.n_cores
+    JT = jobs.status.shape[0]
     awake = (farm.srv_state == SrvState.ACTIVE) \
         | (farm.srv_state == SrvState.IDLE)
     free = farm.core_busy_until >= INF                          # (N, C)
-    fr = jnp.cumsum(free, axis=1) - 1                           # free rank
-    n_start = jnp.where(awake,
-                        jnp.minimum(free.sum(axis=1), farm.q_len), 0)
-    start = free & (fr < n_start[:, None])                      # (N, C)
-    qpos = (farm.q_head[:, None] + fr) % Q                      # (N, C)
-    tid = jnp.take_along_axis(farm.q_tasks, qpos, axis=1)       # (N, C)
-    if freq is None:
-        svc = service[jnp.clip(tid, 0)] / cfg.core_freq
-    else:
-        svc = service[jnp.clip(tid, 0)] / freq[:, None]
-    busy_until = now + svc.astype(farm.core_busy_until.dtype)
+    n_free = free.sum(axis=1)
+    n_start = jnp.where(awake, jnp.minimum(n_free, farm.q_len), 0)
 
-    farm = replace(
-        farm,
-        core_busy_until=jnp.where(start, busy_until, farm.core_busy_until),
-        core_task=jnp.where(start, tid, farm.core_task),
-        q_head=(farm.q_head + n_start) % Q,
-        q_len=farm.q_len - n_start)
-    return farm, jnp.where(start, tid, -1)
+    def apply_start(farm, jobs, rank):
+        queued = jobs.status == TaskStatus.QUEUED
+        srv = jnp.clip(jobs.server, 0)
+        # task side: elementwise
+        start_t = queued & (rank < n_start[srv])                # (JT,)
+        if freq is None:
+            svc = jobs.service / cfg.core_freq
+        else:
+            svc = jobs.service / freq[srv]
+        end_t = (now + svc).astype(jobs.task_end.dtype)
+        status = jnp.where(start_t, TaskStatus.RUNNING, jobs.status)
+        task_end = jnp.where(start_t, end_t, jobs.task_end)
+        jobs = replace(jobs, status=status, task_end=task_end)
+
+        # core side: the r-th starting task of server s takes the r-th
+        # free core; build the (s, r) -> task table with one small
+        # scatter, then fill cores elementwise (the busy_until expression
+        # is the same float math as end_t, so task_end stays bit-equal)
+        row = jnp.where(start_t, srv, N)
+        col = jnp.clip(jnp.where(start_t, rank, 0), 0, C - 1)
+        tid_at = jnp.full((N, C), JT, jnp.int32).at[row, col].set(
+            jnp.arange(JT, dtype=jnp.int32), mode="drop")
+        fr = jnp.cumsum(free, axis=1) - 1                       # free rank
+        start_c = free & (fr < n_start[:, None])                # (N, C)
+        tid_c = jnp.take_along_axis(tid_at, jnp.clip(fr, 0, C - 1), axis=1)
+        if freq is None:
+            svc_c = jobs.service[jnp.clip(tid_c, 0, JT - 1)] / cfg.core_freq
+        else:
+            svc_c = jobs.service[jnp.clip(tid_c, 0, JT - 1)] / freq[:, None]
+        busy_until = (now + svc_c).astype(farm.core_busy_until.dtype)
+        farm = replace(
+            farm,
+            core_busy_until=jnp.where(start_c, busy_until,
+                                      farm.core_busy_until),
+            q_len=farm.q_len - n_start)
+        return farm, jobs
+
+    def do(args):
+        farm, jobs = args
+        queued = jobs.status == TaskStatus.QUEUED
+
+        def dense(args):
+            farm, jobs = args
+            return apply_start(farm, jobs, queued_rank(jobs, cfg, queued))
+
+        if JT <= COMPACT_Q:
+            return dense(args)
+
+        tids, valid, covered = compact_mask(queued, COMPACT_Q)
+
+        def compact(args):
+            farm, jobs = args
+            srv = jnp.clip(jobs.server, 0)
+            tq = jnp.clip(tids, 0)
+            srv_b = jnp.where(valid, srv[tq], N)
+            seq_b = jobs.enqueue_seq[tq]
+            # pairwise FIFO rank inside the batch — equal to the dense
+            # rank because the batch covers every queued task
+            same = valid[None, :] & valid[:, None] \
+                & (srv_b[None, :] == srv_b[:, None])
+            rank_b = jnp.sum(same & (seq_b[None, :] < seq_b[:, None]),
+                             axis=1).astype(jnp.int32)
+            rank = jnp.zeros((JT,), jnp.int32).at[
+                jnp.where(valid, tids, JT)].set(rank_b, mode="drop")
+            return apply_start(farm, jobs, rank)
+
+        return jax.lax.cond(covered, compact, dense, args)
+
+    return jax.lax.cond((n_start > 0).any(), do, lambda a: a, (farm, jobs))
 
 
 def refresh_idle_state(farm: ServerFarm, cfg: SimConfig, now):

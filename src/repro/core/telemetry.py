@@ -36,9 +36,9 @@ from . import thermal as thermal_mod
 from .types import (INF, SimConfig, SrvState, TaskStatus, Telemetry,
                     TelemetryConfig, replace)
 
-__all__ = ["init_telemetry", "window_values", "accumulate", "summarize",
-           "hist_percentile", "hist_mean", "bin_edges", "TelemetrySummary",
-           "WIN_COLS"]
+__all__ = ["init_telemetry", "window_values", "accumulate_finishes",
+           "summarize", "hist_percentile", "hist_mean", "bin_edges",
+           "TelemetrySummary", "WIN_COLS"]
 
 # ``Telemetry.win`` column layout.  Columns up to WIN_MAX_TEMP are
 # time-weighted sums (column WIN_OCC accumulates dt itself, i.e. the
@@ -87,25 +87,40 @@ def init_telemetry(cfg: SimConfig) -> Telemetry:
 # in-loop accumulation
 # ==========================================================================
 
-def window_values(state, cfg: SimConfig, dt) -> jnp.ndarray:
+def window_values(state, cfg: SimConfig, dt, p_busy=None,
+                  onehot=None, thermal_ctx=None) -> jnp.ndarray:
     """(WIN_COLS,) metric·dt vector for the piecewise-constant interval
     [t, t+dt) — computed from the PRE-advance state, matching the exact
     energy integration in power.accrue_server_energy.  The carbon/price
     columns are closed-form interval integrals (not rate·dt samples), so
-    window sums reproduce the accumulated grams/dollars exactly."""
+    window sums reproduce the accumulated grams/dollars exactly.
+
+    ``p_busy`` / ``onehot`` optionally supply the precomputed per-server
+    (power, busy-count) pair and (N, NUM) state one-hot, and
+    ``thermal_ctx`` the (target, alpha, t_end) RC pieces — the engine's
+    advance shares one evaluation between energy accrual, these window
+    columns, and the thermal integrator instead of recomputing the power
+    select, state comparisons, and RC exponential in each subsystem."""
     farm = state.farm
     tcfg = cfg.thermal
     dtf = dt.astype(jnp.float32)
     s = state.jobs.status
     active = ((s == TaskStatus.READY) | (s == TaskStatus.QUEUED)
               | (s == TaskStatus.RUNNING)).sum().astype(jnp.float32)
-    awake = ((farm.srv_state == SrvState.ACTIVE)
-             | (farm.srv_state == SrvState.IDLE)).sum().astype(jnp.float32)
     qdepth = (farm.q_len.sum() + state.sched.gq_len).astype(jnp.float32)
     throttled = state.thermal.throttled if tcfg.enabled else None
-    p_srv, p_sw = power.total_power(farm, state.net, cfg, throttled)
-    per_state = (farm.srv_state[:, None]
-                 == jnp.arange(SrvState.NUM)[None, :]).sum(0)
+    if p_busy is None:
+        p_busy = power.server_power(farm, cfg, throttled)
+    if onehot is None:
+        onehot = (farm.srv_state[:, None]
+                  == jnp.arange(SrvState.NUM)[None, :]).astype(jnp.float32)
+    p_srv = p_busy[0].sum().astype(jnp.float32)
+    if cfg.has_network:
+        p_sw = power.switch_power(state.net, cfg).sum().astype(jnp.float32)
+    else:
+        p_sw = jnp.float32(0.0)
+    per_state = onehot.sum(axis=0)
+    awake = per_state[SrvState.ACTIVE] + per_state[SrvState.IDLE]
     head = jnp.stack([jnp.float32(1.0), active, awake, qdepth, p_srv, p_sw])
     if tcfg.enabled:
         t_srv = state.thermal.t_srv
@@ -117,11 +132,14 @@ def window_values(state, cfg: SimConfig, dt) -> jnp.ndarray:
         # (T0−target)·τ·(1−e^{−dt/τ}), averaged over servers) and the max
         # column uses the endpoint max (trajectories are monotone toward
         # their targets) — same exactness as the energy/carbon columns
-        p_vec = power.server_power(farm, cfg, throttled)[0]
-        target = p_vec * tcfg.r_th \
-            + thermal_mod.inlet_temps(state.thermal, tcfg)
-        alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
-        t_end = t_srv + (target - t_srv) * alpha
+        if thermal_ctx is None:
+            p_vec = p_busy[0]
+            target = p_vec * tcfg.r_th \
+                + thermal_mod.inlet_temps(state.thermal, tcfg)
+            alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
+            t_end = t_srv + (target - t_srv) * alpha
+        else:
+            target, alpha, t_end = thermal_ctx
         mean_int = target.mean() * dtf \
             + (t_srv - target).mean() * tcfg.tau_th * alpha
         max_interval = jnp.maximum(t_srv, t_end).max()
@@ -153,24 +171,26 @@ def window_index(t, dt, tcfg: TelemetryConfig) -> jnp.ndarray:
                     0, tcfg.n_windows - 1)
 
 
-def accumulate(telem: Telemetry, cfg: SimConfig, jobs, old_job_finish,
-               old_task_finish, widx, wvals) -> Telemetry:
-    """One per-step telemetry update: bin the latencies of jobs/tasks that
-    finished this step, bucket the window metrics, bump QoS counters.
+def accumulate_finishes(telem: Telemetry, cfg: SimConfig, jobs,
+                        old_job_finish, old_task_finish) -> Telemetry:
+    """Bin the latencies of every job/task that finished since the finish
+    arrays were captured, and bump the QoS counters.
 
-    ``old_*_finish`` are the finish arrays captured before this step's event
-    appliers ran — the INF -> finite transition identifies new completions.
-    """
+    ``old_*_finish`` are the finish arrays captured before the macro-step
+    began — the INF -> finite transition identifies new completions, so
+    one binning pass per macro-step covers every inner event (the bin a
+    latency lands in does not depend on WHEN it is binned).  Window
+    accrual is separate (the engine adds each interval's metric·dt inside
+    its advance, exactly like the energy integral)."""
     tcfg = cfg.telemetry
     T = cfg.tasks_per_job
     new_job = (old_job_finish >= INF / 2) & (jobs.job_finish < INF / 2)
     new_task = (old_task_finish >= INF / 2) & (jobs.finish < INF / 2)
-    zero = jnp.zeros((), jnp.int32)
 
-    def bin_and_bucket(args):
+    def bin_finishes(args):
         # everything latency-shaped lives INSIDE the gate: quiet steps
         # must not pay the (J,)/(J·T,) latency/QoS passes
-        jh0, th0, win0 = args
+        jh0, th0 = args
         job_lat = jnp.maximum(jobs.job_finish - jobs.arrival, 0.0)
         jw = new_job.astype(jnp.float32)
         # task latency = finish - its job's arrival (sojourn to this stage)
@@ -185,20 +205,29 @@ def accumulate(telem: Telemetry, cfg: SimConfig, jobs, old_job_finish,
         tail = (new_job
                 & (job_lat > tcfg.tail_thresh)).sum().astype(jnp.int32)
 
+        from ..kernels import ref
         if tcfg.use_kernel:
             from ..kernels import telemetry_bin
             interp = jax.default_backend() != "tpu"
-            jh, th, win = telemetry_bin.telemetry_accum(
-                job_lat, jw, task_lat, tw, jh0, th0, win0, widx, wvals,
+            # the fused kernel bins histograms and buckets windows in one
+            # pass; windows accrue separately per interval now, so feed
+            # it a single dummy row with a zero add (the kernel shapes
+            # off win, so this keeps the dead window pass at one row)
+            zwin = jnp.zeros((telem.win.shape[1],), jnp.float32)
+            jh, th, _ = telemetry_bin.telemetry_accum(
+                job_lat, jw, task_lat, tw, jh0, th0, telem.win[:1],
+                jnp.zeros((), jnp.int32), zwin,
                 tcfg.lat_lo, tcfg.lat_hi, interpret=interp)
-            return jh, th, win, miss, tot, tail
-        from ..kernels import ref
+            return jh, th, miss, tot, tail
 
         def dense(args):
-            jh0, th0, win0 = args
-            return ref.telemetry_accum_reference(
-                job_lat, jw, task_lat, tw, jh0, th0, win0, widx, wvals,
-                tcfg.lat_lo, tcfg.lat_hi)
+            jh0, th0 = args
+            B = jh0.shape[0]
+            jh = jh0.at[ref.log_bin(job_lat, tcfg.lat_lo, tcfg.lat_hi,
+                                    B)].add(jw)
+            th = th0.at[ref.log_bin(task_lat, tcfg.lat_lo, tcfg.lat_hi,
+                                    B)].add(tw)
+            return jh, th
 
         Kc = tcfg.compact
         if Kc <= 0 or Kc >= job_lat.shape[0]:
@@ -211,27 +240,28 @@ def accumulate(telem: Telemetry, cfg: SimConfig, jobs, old_job_finish,
         def compact(args):
             jv, jww = _compact_finishes(new_job, job_lat, Kc, tcfg.lat_lo)
             tv, tww = _compact_finishes(new_task, task_lat, Kc, tcfg.lat_lo)
-            jh0, th0, win0 = args
-            return ref.telemetry_accum_reference(
-                jv, jww, tv, tww, jh0, th0, win0, widx, wvals,
-                tcfg.lat_lo, tcfg.lat_hi)
+            jh0, th0 = args
+            B = jh0.shape[0]
+            jh = jh0.at[ref.log_bin(jv, tcfg.lat_lo, tcfg.lat_hi,
+                                    B)].add(jww)
+            th = th0.at[ref.log_bin(tv, tcfg.lat_lo, tcfg.lat_hi,
+                                    B)].add(tww)
+            return jh, th
 
         small = (new_job.sum() <= Kc) & (new_task.sum() <= Kc)
-        jh, th, win = jax.lax.cond(small, compact, dense, args)
-        return jh, th, win, miss, tot, tail
+        jh, th = jax.lax.cond(small, compact, dense, args)
+        return jh, th, miss, tot, tail
 
-    def bucket_only(args):
-        # no completions this step: the histograms are untouched and only
-        # the (1-row) window bucket accrues — skip the (J,)/(J*T,)-row
-        # histogram scatters that dominate quiet steps
-        jh0, th0, win0 = args
-        return jh0, th0, win0.at[widx].add(wvals), zero, zero, zero
+    def no_finishes(args):
+        jh0, th0 = args
+        zero = jnp.zeros((), jnp.int32)
+        return jh0, th0, zero, zero, zero
 
-    jh, th, win, miss, tot, tail = jax.lax.cond(
-        new_job.any() | new_task.any(), bin_and_bucket, bucket_only,
-        (telem.job_hist, telem.task_hist, telem.win))
+    jh, th, miss, tot, tail = jax.lax.cond(
+        new_job.any() | new_task.any(), bin_finishes, no_finishes,
+        (telem.job_hist, telem.task_hist))
 
-    return replace(telem, job_hist=jh, task_hist=th, win=win,
+    return replace(telem, job_hist=jh, task_hist=th,
                    sla_miss=telem.sla_miss + miss,
                    sla_total=telem.sla_total + tot,
                    tail_viol=telem.tail_viol + tail)

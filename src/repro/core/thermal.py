@@ -175,16 +175,19 @@ def effective_freq(therm: ThermalState, cfg: SimConfig) -> jnp.ndarray:
 # ==========================================================================
 
 def advance(therm: ThermalState, cfg: SimConfig, p_srv, p_sw, t,
-            dt) -> ThermalState:
+            dt, t_new=None) -> ThermalState:
     """Integrate temperatures, cooling energy, carbon, and cost over the
     piecewise-constant interval [t, t+dt).  ``p_srv`` (N,) is the
     per-server power of the PRE-advance state (throttle-scaled), ``p_sw``
-    the total switch power."""
+    the total switch power.  ``t_new`` optionally supplies the already
+    computed end-of-interval temperatures (the engine's advance shares
+    one RC evaluation with the telemetry window columns)."""
     tcfg = cfg.thermal
     dtf = dt.astype(jnp.float32)
-    target = p_srv * tcfg.r_th + inlet_temps(therm, tcfg)
-    alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
-    t_new = therm.t_srv + (target - therm.t_srv) * alpha
+    if t_new is None:
+        target = p_srv * tcfg.r_th + inlet_temps(therm, tcfg)
+        alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
+        t_new = therm.t_srv + (target - therm.t_srv) * alpha
     # temperature is monotone toward target within the interval, so the
     # endpoint max tracks the true running peak exactly
     t_peak = jnp.maximum(therm.t_peak, t_new)
@@ -248,25 +251,44 @@ def apply_throttle(farm, jobs, therm: ThermalState, cfg: SimConfig, now):
 def next_crossing(state, cfg: SimConfig) -> jnp.ndarray:
     """Earliest throttle engage/release threshold crossing (scalar; INF if
     none) — a real event source: solving T(t) = threshold on the
-    exponential keeps throttling exact instead of checked-at-events."""
+    exponential keeps throttling exact instead of checked-at-events.
+
+    The solve (a power evaluation + rack recirculation + masked logs,
+    ~4 dense passes) is cond-gated on "any server within
+    ``crossing_guard`` °C of its pending threshold" — far from the
+    thresholds the candidate is INF without touching the farm arrays,
+    which removes the throttling event source's per-step cost from the
+    common no-crossing-imminent regime.  Servers outside the band engage
+    at the next ordinary event (apply_throttle checks every step) rather
+    than at the exact crossing instant; crossing_guard=INF restores the
+    always-solve exact behavior.  The numpy oracle mirrors the band."""
     tcfg = cfg.thermal
     therm = state.thermal
-    p_srv, _ = power.server_power(state.farm, cfg, throttled=therm.throttled)
-    target = p_srv * tcfg.r_th + inlet_temps(therm, tcfg)
     t = therm.t_srv
     thr = tcfg.t_throttle
     rel = min(tcfg.t_release, tcfg.t_throttle)
+    guard = tcfg.crossing_guard
+    near_up = ~therm.throttled & (t >= thr - guard)
+    near_dn = therm.throttled & (t <= rel + guard)
 
-    def solve(valid, num, den):
-        arg = jnp.where(valid, num / den, jnp.float32(2.0))
-        return jnp.where(valid & (arg > 1.0),
-                         tcfg.tau_th * jnp.log(arg), INF)
+    def solve_all(_):
+        p_srv, _b = power.server_power(state.farm, cfg,
+                                       throttled=therm.throttled)
+        target = p_srv * tcfg.r_th + inlet_temps(therm, tcfg)
 
-    up = ~therm.throttled & (t < thr - TEMP_TOL) & (target > thr)
-    dt_up = solve(up, target - t, target - thr)
-    dn = therm.throttled & (t > rel + TEMP_TOL) & (target < rel)
-    dt_dn = solve(dn, t - target, rel - target)
-    dt_min = jnp.minimum(dt_up, dt_dn).min()
+        def solve(valid, num, den):
+            arg = jnp.where(valid, num / den, jnp.float32(2.0))
+            return jnp.where(valid & (arg > 1.0),
+                             tcfg.tau_th * jnp.log(arg), INF)
+
+        up = near_up & (t < thr - TEMP_TOL) & (target > thr)
+        dt_up = solve(up, target - t, target - thr)
+        dn = near_dn & (t > rel + TEMP_TOL) & (target < rel)
+        dt_dn = solve(dn, t - target, rel - target)
+        return jnp.minimum(dt_up, dt_dn).min()
+
+    dt_min = jax.lax.cond((near_up | near_dn).any(), solve_all,
+                          lambda _: jnp.float32(INF), None)
     t_cross = (state.t + dt_min * (1.0 + _CROSS_EPS) + 1.0e-9) \
         .astype(cfg.time_dtype)
     # at large t a small solved dt can round t_cross back onto state.t in

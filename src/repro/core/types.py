@@ -185,6 +185,15 @@ class ThermalConfig:
     t_release: float = INF      # effective release = min(t_release, t_throttle)
     throttle_freq: float = 0.5
     throttle_power_scale: float = 0.5
+    # crossing-solve guard band (°C): the per-step analytic crossing solve
+    # (thermal.next_crossing — power eval + inlet recirculation + logs) is
+    # cond-gated on "any server within this band of its pending threshold"
+    # (t_throttle from below when unthrottled, t_release from above when
+    # throttled).  Servers outside the band latch at the next ordinary
+    # event instead of at the exact crossing instant, which only matters
+    # when a temperature jumps the whole band within one event interval.
+    # INF = solve every step (exact crossings regardless of distance).
+    crossing_guard: float = 8.0
     # CRAC efficiency: COP(T_sup) = cop_a·T² + cop_b·T + cop_c evaluated at
     # the (static) supply setpoint; cooling power = P_IT / COP
     cop_a: float = 0.0068
@@ -264,10 +273,24 @@ class SimConfig:
     arrivals_per_step: int = 8      # same-timestamp jobs admitted per step
                                     # (one shared scheduler snapshot — open
                                     # loop bursts no longer serialize)
+    # event-coalesced macro-stepping: one jitted sim_step retires up to
+    # this many successive event TIMES.  The first events_per_step-1 go
+    # through the cheap advance/completion core (an inner bounded
+    # while_loop) whenever gating shows the pending event needs no
+    # expensive pass (no flow completion/spawn, no throttle crossing);
+    # the final event always runs the full step.  1 = seed one-event
+    # behavior.  Final states are identical for any value (the gating is
+    # conservative); only the step decomposition changes.
+    events_per_step: int = 8
     # hot-loop implementation: dense masked batch updates for drain /
     # arrival-assignment / flow-spawn (True) vs the seed scalar fori_loops
     # (False, kept as the semantic reference — tests compare both)
     use_vectorized_hot_loop: bool = True
+    # route the interval advance (energy accrual + completion free + farm
+    # next-event candidate) through the fused Pallas kernel
+    # (kernels/dcsim_step.py); off-TPU it falls back to interpret mode,
+    # mirroring the telemetry backend switch
+    use_kernel: bool = False
     # policies
     sched_policy: int = SchedPolicy.LOAD_BALANCE
     sleep_policy: int = SleepPolicy.ALWAYS_ON
@@ -308,7 +331,6 @@ class SimConfig:
 class ServerFarm:
     # cores
     core_busy_until: jnp.ndarray    # (N, C) time current task completes, INF idle
-    core_task: jnp.ndarray          # (N, C) flat task id, -1 if none
     # server-level power
     srv_state: jnp.ndarray          # (N,) SrvState
     srv_wake_at: jnp.ndarray        # (N,) wake completion time (INF otherwise)
@@ -316,10 +338,14 @@ class ServerFarm:
     srv_tau: jnp.ndarray            # (N,) delay-timer value (INF = never sleep)
     srv_pool: jnp.ndarray           # (N,) 0 active pool / 1 sleep pool (WASP)
     srv_enabled: jnp.ndarray        # (N,) bool: receives new work (case A)
-    # local ring queues
-    q_tasks: jnp.ndarray            # (N, Q) flat task ids
-    q_head: jnp.ndarray             # (N,)
-    q_len: jnp.ndarray              # (N,)
+    # task-major local queues: queue membership lives on the TASKS
+    # (JobTable.status == QUEUED + JobTable.enqueue_seq for FIFO order);
+    # the farm only carries the per-server occupancy counter and the
+    # global enqueue sequence counter.  The seed's (N, Q) ring-buffer —
+    # 5 MB of per-step state at 20K servers, plus a core->task gather and
+    # slot scatters on every start — is gone.
+    q_len: jnp.ndarray              # (N,) queued-task count per server
+    q_seq: jnp.ndarray              # () global FIFO enqueue counter
     # stats
     energy: jnp.ndarray             # (N,) joules
     residency: jnp.ndarray          # (N, SrvState.NUM) seconds per state
@@ -340,6 +366,10 @@ class JobTable:
     status: jnp.ndarray             # (J*T,) TaskStatus
     edge_sent: jnp.ndarray          # (J*T, Dmax) network edge already handled
     server: jnp.ndarray             # (J*T,) assigned server (-1 unassigned)
+    enqueue_seq: jnp.ndarray        # (J*T,) global FIFO stamp set when the
+                                    # task enters its server's queue (each
+                                    # task enqueues at most once, so stamps
+                                    # are unique and bounded by J*T)
     task_end: jnp.ndarray           # (J*T,) busy_until stamped at start (INF
                                     # otherwise) — lets completions resolve
                                     # elementwise in task space, no scatter
@@ -438,20 +468,18 @@ class SimState:
 # --------------------------------------------------------------------------
 
 def init_farm(cfg: SimConfig) -> ServerFarm:
-    N, C, Q = cfg.n_servers, cfg.n_cores, cfg.local_q
+    N, C = cfg.n_servers, cfg.n_cores
     tdt = cfg.time_dtype
     return ServerFarm(
         core_busy_until=jnp.full((N, C), INF, tdt),
-        core_task=jnp.full((N, C), -1, jnp.int32),
         srv_state=jnp.full((N,), SrvState.IDLE, jnp.int32),
         srv_wake_at=jnp.full((N,), INF, tdt),
         srv_idle_since=jnp.zeros((N,), tdt),
         srv_tau=jnp.full((N,), INF, tdt),
         srv_pool=jnp.zeros((N,), jnp.int32),
         srv_enabled=jnp.ones((N,), bool),
-        q_tasks=jnp.full((N, Q), -1, jnp.int32),
-        q_head=jnp.zeros((N,), jnp.int32),
         q_len=jnp.zeros((N,), jnp.int32),
+        q_seq=jnp.zeros((), jnp.int32),
         energy=jnp.zeros((N,), jnp.float32),
         residency=jnp.zeros((N, SrvState.NUM), jnp.float32),
         busy_core_seconds=jnp.zeros((N,), jnp.float32),

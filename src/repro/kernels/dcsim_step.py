@@ -34,15 +34,20 @@ INF = 1.0e30
 
 
 def _kernel(t_ref, tn_ref, busy_ref, state_ref, energy_ref, bsec_ref,
-            wake_ref, isince_ref, tau_ref, ptab_ref,
+            wake_ref, isince_ref, tau_ref, thr_ref, ptab_ref,
             new_busy_ref, done_ref, new_energy_ref, new_bsec_ref, next_ref,
-            *, p_core_active, p_core_idle, n_cores):
+            *, p_core_active, p_core_idle, n_cores, throttle_power_scale):
     dt = (tn_ref[0] - t_ref[0]).astype(jnp.float32)
     cb = busy_ref[...]                                    # (bn, C)
     st = state_ref[...]                                   # (bn,)
     busy = (cb < INF).astype(jnp.float32).sum(axis=1)     # (bn,)
     awake = st <= 1
-    p_awake = ptab_ref[0] + busy * p_core_active \
+    # thermally throttled servers draw scaled active-core power
+    # (linear-DVFS approximation, mirrors power.server_power)
+    p_act = jnp.where(thr_ref[...] != 0,
+                      jnp.float32(p_core_active * throttle_power_scale),
+                      jnp.float32(p_core_active))
+    p_awake = ptab_ref[0] + busy * p_act \
         + (n_cores - busy) * p_core_idle
     p_state = ptab_ref[jnp.clip(st, 0, ptab_ref.shape[0] - 1)]
     p = jnp.where(awake, p_awake, p_state)
@@ -62,12 +67,15 @@ def _kernel(t_ref, tn_ref, busy_ref, state_ref, energy_ref, bsec_ref,
 
 def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
                   state_power, p_core_active, p_core_idle,
-                  srv_wake_at=None, srv_idle_since=None, srv_tau=None, *,
+                  srv_wake_at=None, srv_idle_since=None, srv_tau=None,
+                  throttled=None, *, throttle_power_scale=1.0,
                   block_n=256, interpret=False):
     """Fused farm advance.  core_busy (N, C) f32; srv_state (N,) int32;
     energy/busy_seconds/srv_wake_at/srv_idle_since/srv_tau (N,) f32;
     t/t_next scalars; state_power (SrvState.NUM,) f32 table (index 0 =
-    base power of an awake server).
+    base power of an awake server); throttled (N,) bool/int —
+    thermally-throttled servers accrue active-core power scaled by
+    ``throttle_power_scale`` (the PR 3 linear-DVFS coupling).
 
     Returns (new_core_busy, done_mask (N, C) bool, energy, busy_seconds,
     next_candidate) where next_candidate is the farm's min next-event time
@@ -80,6 +88,9 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
         srv_idle_since = jnp.zeros((N,), jnp.float32)
     if srv_tau is None:
         srv_tau = jnp.full((N,), INF, jnp.float32)
+    if throttled is None:
+        throttled = jnp.zeros((N,), jnp.int32)
+    throttled = throttled.astype(jnp.int32)
     block_n = min(block_n, N)
     pad = (-N) % block_n
     if pad:
@@ -91,11 +102,13 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
         srv_wake_at = jnp.pad(srv_wake_at, (0, pad), constant_values=INF)
         srv_idle_since = jnp.pad(srv_idle_since, (0, pad))
         srv_tau = jnp.pad(srv_tau, (0, pad), constant_values=INF)
+        throttled = jnp.pad(throttled, (0, pad))
     Np = N + pad
     grid = (Np // block_n,)
 
     kernel = functools.partial(_kernel, p_core_active=p_core_active,
-                               p_core_idle=p_core_idle, n_cores=C)
+                               p_core_idle=p_core_idle, n_cores=C,
+                               throttle_power_scale=throttle_power_scale)
     t1 = jnp.asarray(t, jnp.float32).reshape(1)
     t2 = jnp.asarray(t_next, jnp.float32).reshape(1)
 
@@ -112,6 +125,7 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
             pl.BlockSpec((block_n,), lambda i: (i,)),              # wake_at
             pl.BlockSpec((block_n,), lambda i: (i,)),              # idle_since
             pl.BlockSpec((block_n,), lambda i: (i,)),              # tau
+            pl.BlockSpec((block_n,), lambda i: (i,)),              # throttled
             pl.BlockSpec((state_power.shape[0],), lambda i: (0,)),  # table
         ],
         out_specs=[
@@ -132,5 +146,5 @@ def dcsim_advance(core_busy, srv_state, energy, busy_seconds, t, t_next,
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(t1, t2, core_busy, srv_state, energy, busy_seconds,
-      srv_wake_at, srv_idle_since, srv_tau, state_power)
+      srv_wake_at, srv_idle_since, srv_tau, throttled, state_power)
     return (nb[:N], dm[:N].astype(bool), en[:N], bs[:N], nc.min())

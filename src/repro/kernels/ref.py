@@ -86,11 +86,14 @@ def telemetry_accum_reference(job_vals, job_wts, task_vals, task_wts,
 def dcsim_advance_reference(core_busy, srv_state, energy, busy_seconds,
                             t, t_next, state_power, p_core_active,
                             p_core_idle, srv_wake_at=None,
-                            srv_idle_since=None, srv_tau=None, inf=1.0e30):
+                            srv_idle_since=None, srv_tau=None,
+                            throttled=None, throttle_power_scale=1.0,
+                            inf=1.0e30):
     """One fused engine advance (the hot loop of core/engine.sim_step):
 
       dt      = t_next - t
-      power_i = table[state_i] + busy_i·p_act + idle_i·p_idle  (awake only)
+      power_i = table[state_i] + busy_i·p_act + idle_i·p_idle  (awake only;
+                p_act scales by throttle_power_scale on throttled servers)
       energy += power·dt ; busy_seconds += busy_i·dt
       completions: core slots with busy_until <= t_next -> freed (inf)
       next candidate = min(surviving busy_until, wake completions,
@@ -105,10 +108,15 @@ def dcsim_advance_reference(core_busy, srv_state, energy, busy_seconds,
         srv_idle_since = jnp.zeros((N,), jnp.float32)
     if srv_tau is None:
         srv_tau = jnp.full((N,), inf, jnp.float32)
+    if throttled is None:
+        throttled = jnp.zeros((N,), jnp.int32)
     dt = (t_next - t).astype(jnp.float32)
     busy = (core_busy < inf).sum(axis=1).astype(jnp.float32)
     awake = srv_state <= 1                       # ACTIVE=0 / IDLE=1
-    p_awake = state_power[0] + busy * p_core_active \
+    p_act = jnp.where(throttled.astype(jnp.int32) != 0,
+                      jnp.float32(p_core_active * throttle_power_scale),
+                      jnp.float32(p_core_active))
+    p_awake = state_power[0] + busy * p_act \
         + (C - busy) * p_core_idle
     p = jnp.where(awake, p_awake, state_power[jnp.clip(srv_state, 0, 5)])
     energy = energy + p * dt

@@ -215,14 +215,21 @@ class OracleSim:
         tcfg = self.cfg.thermal
         thr = tcfg.t_throttle
         rel = min(tcfg.t_release, thr)
+        guard = tcfg.crossing_guard
+        # mirror the engine's crossing-guard gating: only servers within
+        # ``crossing_guard`` °C of their pending threshold get a solved
+        # crossing event; the rest latch at the next ordinary event via
+        # _apply_throttle (thermal.next_crossing has the same band)
         target = self._powers() * tcfg.r_th + self._inlet()
         dt = INF
         for i, s in enumerate(self.servers):
             ti = self.temp[i]
-            if not s.throttled and ti < thr - TEMP_TOL and target[i] > thr:
+            if not s.throttled and ti >= thr - guard \
+                    and ti < thr - TEMP_TOL and target[i] > thr:
                 dt = min(dt, tcfg.tau_th
                          * math.log((target[i] - ti) / (target[i] - thr)))
-            if s.throttled and ti > rel + TEMP_TOL and target[i] < rel:
+            if s.throttled and ti <= rel + guard \
+                    and ti > rel + TEMP_TOL and target[i] < rel:
                 dt = min(dt, tcfg.tau_th
                          * math.log((ti - target[i]) / (rel - target[i])))
         if dt >= INF / 2:

@@ -163,6 +163,9 @@ def test_vectorized_matches_scalar_network(sched):
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_queue_push_many_matches_sequential(seed):
+    """Task-major push: the batched multi-push must hand out the same
+    accept/drop decisions, per-server occupancy, and FIFO stamps as K
+    sequential scalar pushes."""
     cfg = SimConfig(n_servers=4, n_cores=2, local_q=3, max_jobs=16)
     rng = np.random.default_rng(seed)
     farm = init_farm(cfg)
@@ -175,22 +178,28 @@ def test_queue_push_many_matches_sequential(seed):
     valid = jnp.asarray(rng.random(K) < 0.8)
 
     f_seq = farm
-    oks = []
+    oks, seqs = [], []
     for i in range(K):
         def push(f):
             return server.queue_push(f, cfg, srvs[i], tids[i])
-        f2, ok = jax.lax.cond(
-            valid[i], push, lambda f: (f, jnp.asarray(False)), f_seq)
-        f_seq, oks = f2, oks + [ok]
-    f_bat, ok_bat = server.queue_push_many(farm, cfg, srvs, tids, valid)
+        f2, ok, sq = jax.lax.cond(
+            valid[i], push,
+            lambda f: (f, jnp.asarray(False), jnp.zeros((), jnp.int32)),
+            f_seq)
+        f_seq, oks, seqs = f2, oks + [ok], seqs + [sq]
+    f_bat, ok_bat, seq_bat = server.queue_push_many(farm, cfg, srvs, tids,
+                                                    valid)
 
     np.testing.assert_array_equal(np.asarray(f_bat.q_len),
                                   np.asarray(f_seq.q_len))
-    np.testing.assert_array_equal(np.asarray(f_bat.q_tasks),
-                                  np.asarray(f_seq.q_tasks))
+    assert int(f_bat.q_seq) == int(f_seq.q_seq)
     assert int(f_bat.dropped) == int(f_seq.dropped)
     np.testing.assert_array_equal(np.asarray(ok_bat),
                                   np.asarray(jnp.stack(oks)))
+    # accepted pushes carry identical FIFO stamps
+    ok_np = np.asarray(ok_bat)
+    np.testing.assert_array_equal(np.asarray(seq_bat)[ok_np],
+                                  np.asarray(jnp.stack(seqs))[ok_np])
 
 
 def test_round_robin_full_falls_back_to_least_loaded():

@@ -109,17 +109,22 @@ def _check_dcsim_advance(n, c, seed):
     tau = np.where(rng.random(n) < 0.5, rng.uniform(0.1, 2.0, n),
                    np.float32(INF)).astype(np.float32)
     ptab = jnp.asarray([65.0, 65.0, 15.0, 9.0, 0.0, 145.0], jnp.float32)
+    # thermally throttled servers accrue scaled active-core power
+    throttled = (rng.random(n) < 0.3).astype(np.int32)
+    scale = 0.6
 
     got = dcsim_advance(jnp.asarray(busy), jnp.asarray(state),
                         jnp.asarray(energy), jnp.asarray(bsec),
                         t, t_next, ptab, 13.0, 2.0,
                         jnp.asarray(wake), jnp.asarray(isince),
-                        jnp.asarray(tau), interpret=True)
+                        jnp.asarray(tau), jnp.asarray(throttled),
+                        throttle_power_scale=scale, interpret=True)
     exp = ref.dcsim_advance_reference(
         jnp.asarray(busy), jnp.asarray(state), jnp.asarray(energy),
         jnp.asarray(bsec), jnp.asarray(t), jnp.asarray(t_next), ptab,
         13.0, 2.0, jnp.asarray(wake), jnp.asarray(isince),
-        jnp.asarray(tau))
+        jnp.asarray(tau), jnp.asarray(throttled),
+        throttle_power_scale=scale)
     for g, e in zip(got, exp):
         np.testing.assert_allclose(np.float32(g), np.float32(e),
                                    rtol=1e-5, atol=1e-5)

@@ -165,7 +165,8 @@ def test_replica_stats_empty_replica_no_warnings():
     RuntimeWarnings (the montecarlo bugfix)."""
     cfg = SimConfig(n_servers=2, n_cores=1, local_q=8, max_jobs=16,
                     tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON,
-                    max_events=1, telemetry=TEL)    # too few events to finish
+                    max_events=1, events_per_step=1,   # too few events to
+                    telemetry=TEL)                     # finish anything
     n_jobs, R = 8, 2
     rng = np.random.default_rng(0)
     specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]

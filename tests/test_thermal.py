@@ -131,8 +131,13 @@ def test_throttle_crossing_is_exact():
     stretched completion time (the crossing is an *event*, not a check at
     the next unrelated event)."""
     tf = 0.5
+    # crossing_guard=INF: the crossing here starts 28 °C below the
+    # threshold with no intervening events, so the guard-band gating must
+    # be disabled for the solve to fire from that far away (the default
+    # band defers engagement to the next event — of which there are none
+    # until the completion itself)
     tcfg = ThermalConfig(enabled=True, r_th=0.5, tau_th=1.0, recirc=0.0,
-                         t_throttle=50.0, t_release=40.0,
+                         t_throttle=50.0, t_release=40.0, crossing_guard=INF,
                          throttle_freq=tf, throttle_power_scale=1.0)
     cfg = SimConfig(n_servers=1, n_cores=1, max_jobs=16, tasks_per_job=1,
                     sleep_policy=SleepPolicy.ALWAYS_ON, max_events=5_000,
