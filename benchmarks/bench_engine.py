@@ -84,9 +84,41 @@ def network_farm(n_jobs=300, seed=0, repeats=0,
     return best, res
 
 
+def control_plane_farm(n_jobs=600, seed=0, repeats=0):
+    """The full PR-5 carbon/thermal control plane armed at once on a
+    512-server farm: per-rack CRAC setpoints + the setpoint controller
+    (its tick is an extra event source), diurnal ambient on the supply
+    temperature, and CARBON_AWARE deferral with half the jobs deferrable
+    — the overhead acceptance case for the control-plane event sources
+    and the in-trace per-rack COP path."""
+    thermal = ThermalConfig(enabled=True, r_th=0.25, tau_th=30.0,
+                            t_setpoint=18.0, ctrl_period=0.5,
+                            ctrl_target=45.0,
+                            ambient_swing=3.0, ambient_period=120.0,
+                            carbon_base=350.0, carbon_swing=0.5,
+                            carbon_period=120.0, defer_threshold=350.0)
+    cfg = SimConfig(n_servers=512, n_cores=4, local_q=64,
+                    max_jobs=max(n_jobs, 16), tasks_per_job=1,
+                    sched_policy=SchedPolicy.CARBON_AWARE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=20_000, thermal=thermal)
+    rng = np.random.default_rng(seed)
+    lam = workload.utilization_to_rate(0.5, 0.01, 512, 4)
+    arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
+    specs = [dag_single(rng.exponential(0.01), deferrable=(j % 2 == 0),
+                        defer_slack=30.0) for j in range(n_jobs)]
+    best = 0.0
+    for _ in range(repeats + 1):
+        t0 = time.time()
+        res = farm_mod.simulate(cfg, arr, specs)
+        best = max(best, res.events / (time.time() - t0))
+    return best, res
+
+
 def perf_cases(repeats=2, verbose=True):
     """The fixed acceptance configs, compared to the recorded pre-PR-2
-    baseline.  Post-jit best-of-(repeats) events/s."""
+    baseline (cases introduced later carry no pre-PR-2 number).
+    Post-jit best-of-(repeats) events/s."""
     out = {}
     for name, fn in [("no_network",
                       lambda: one_farm(512, n_jobs=600, repeats=repeats)),
@@ -95,17 +127,22 @@ def perf_cases(repeats=2, verbose=True):
                      ("network_flows_rr",
                       lambda: network_farm(n_jobs=300, repeats=repeats,
                                            sched=SchedPolicy.ROUND_ROBIN,
-                                           max_flows=1024))]:
+                                           max_flows=1024)),
+                     ("control_plane",
+                      lambda: control_plane_farm(n_jobs=600,
+                                                 repeats=repeats))]:
         eps, res = fn()
-        base = BASELINE_PRE_PR2[name]
+        base = BASELINE_PRE_PR2.get(name)
         out[name] = {"events_per_s": eps, "finished": res.n_finished,
-                     "events": res.events,
-                     "baseline_events_per_s": base,
-                     "speedup_vs_baseline": eps / base}
+                     "events": res.events}
+        if base is not None:
+            out[name].update(baseline_events_per_s=base,
+                             speedup_vs_baseline=eps / base)
         if verbose:
+            vs = f" ({eps / base:.2f}x baseline {base:.0f})" if base \
+                else ""
             row(f"bench_engine_{name}", 1e6 / eps,
-                f"events/s={eps:.0f} ({eps / base:.2f}x baseline "
-                f"{base:.0f}) finished={res.n_finished}")
+                f"events/s={eps:.0f}{vs} finished={res.n_finished}")
     return out
 
 

@@ -89,6 +89,15 @@ def _next_arrival(jobs: JobTable) -> jnp.ndarray:
                      jobs.arrival[jnp.clip(jobs.arr_ptr, 0, J - 1)], INF)
 
 
+def _deferral_on(cfg: SimConfig) -> bool:
+    """Static: carbon-aware deferral machinery is traced only when the
+    policy is CARBON_AWARE AND a finite signal threshold arms it —
+    CARBON_AWARE with the default defer_threshold=INF is plain
+    LOAD_BALANCE placement with zero extra step cost."""
+    return cfg.sched_policy == SchedPolicy.CARBON_AWARE \
+        and cfg.thermal.deferral
+
+
 def _farm_candidates(state: SimState, cfg: SimConfig):
     """Candidate next-event time from arrivals + farm sources, with the
     READY/startable pin to ``now`` — everything the cheap core handles."""
@@ -98,6 +107,14 @@ def _farm_candidates(state: SimState, cfg: SimConfig):
         state.farm.srv_wake_at.min(),
         scheduler.next_timer_event(state.farm, cfg),
     ]
+    if _deferral_on(cfg):
+        # deferred-job releases (solved carbon down-crossing / deadline)
+        # are ordinary events: the cheap core runs the release pass too
+        cands.append(state.jobs.admit_at.min())
+    if cfg.thermal.has_ctrl:
+        # setpoint-controller ticks: applied right after the interval
+        # advance in both the cheap and the full step
+        cands.append(state.thermal.ctrl_next)
     t_next = functools.reduce(jnp.minimum, cands)
     # pending READY tasks (or queued work on awake free cores) execute "now"
     ready = (state.jobs.status == TaskStatus.READY).any()
@@ -144,17 +161,22 @@ def _advance_interval(state: SimState, cfg: SimConfig, tc, t_next):
     p_busy = power.server_power(farm, cfg, throttled) if need_p else None
     onehot = (farm.srv_state[:, None]
               == jnp.arange(SrvState.NUM)[None, :]).astype(jnp.float32)
-    thermal_ctx = t_end = None
+    thermal_ctx = t_end = p_cool = p_sw_t = None
     if thermal_on:
-        # one RC evaluation (recirculated inlet + exponential) shared by
-        # the telemetry temperature columns and the thermal integrator
+        # one RC evaluation (recirculated inlet + exponential) and one
+        # CRAC/COP evaluation shared by the telemetry columns and the
+        # thermal integrator
         tcfg = cfg.thermal
         target = p_busy[0] * tcfg.r_th \
-            + thermal_mod.inlet_temps(state.thermal, tcfg)
+            + thermal_mod.inlet_temps(state.thermal, tcfg, state.t)
         alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
         t_end = state.thermal.t_srv \
             + (target - state.thermal.t_srv) * alpha
-        thermal_ctx = (target, alpha, t_end)
+        p_sw_t = power.switch_power(state.net, cfg).sum() \
+            if cfg.has_network else jnp.float32(0.0)
+        p_cool = thermal_mod.cooling_power(p_busy[0], p_sw_t,
+                                           state.thermal, tcfg)
+        thermal_ctx = (target, alpha, t_end, p_cool)
 
     telem = state.telem
     if telemetry_on:
@@ -201,10 +223,9 @@ def _advance_interval(state: SimState, cfg: SimConfig, tc, t_next):
         flows = net_mod.advance_flows(flows, dt)
     therm = state.thermal
     if thermal_on:
-        p_sw = power.switch_power(net, cfg).sum() if cfg.has_network \
-            else jnp.float32(0.0)
-        therm = thermal_mod.advance(therm, cfg, p_busy[0], p_sw,
-                                    state.t, dt, t_new=t_end)
+        therm = thermal_mod.advance(therm, cfg, p_busy[0], p_sw_t,
+                                    state.t, dt, t_new=t_end,
+                                    p_cool=p_cool)
     return replace(state, farm=farm, net=net, flows=flows, thermal=therm,
                    telem=telem, t=t_next)
 
@@ -229,9 +250,19 @@ def _rebuild_job_completion(jobs: JobTable, cfg: SimConfig, now):
 
 
 def _promote_ready(jobs: JobTable, dep_count, cfg: SimConfig):
-    """BLOCKED -> READY where deps are now satisfied (arrived jobs only)."""
+    """BLOCKED -> READY where deps are now satisfied (arrived jobs only).
+
+    Carbon-deferred jobs are NOT promotable even though arr_ptr has moved
+    past them (admission consumed their arrival slot): their zero-dep
+    roots must stay BLOCKED until _apply_releases admits them — without
+    the parked mask, any DAG-edge resolution between arrival and release
+    would flip the parked roots READY on the server=-1 sentinel, running
+    the job mid-high-carbon-window with no placement and no telemetry."""
     T = cfg.tasks_per_job
     arrived = jnp.arange(jobs.status.shape[0]) // T < jobs.arr_ptr
+    if _deferral_on(cfg):
+        parked = jnp.repeat(jobs.admit_at < INF / 2, T)
+        arrived = arrived & ~parked
     ready = (jobs.status == TaskStatus.BLOCKED) & (dep_count <= 0) & arrived
     return jnp.where(ready, TaskStatus.READY, jobs.status)
 
@@ -392,7 +423,7 @@ def _apply_flow_completions(state: SimState, cfg: SimConfig):
     return replace(state, flows=flows, jobs=jobs)
 
 
-def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
+def _apply_arrival(state: SimState, cfg: SimConfig, tc=None, hold=None):
     """Admit up to cfg.arrivals_per_step jobs whose arrival <= t in one
     pass: assign servers to all their tasks (policy), mark roots READY.
 
@@ -413,6 +444,15 @@ def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
     # arrivals are sorted, so eligibility is a prefix; enforce it anyway
     # so an unsorted table degrades to the old one-at-a-time behavior
     elig = jnp.cumprod(elig.astype(jnp.int32)).astype(bool)
+    if hold is not None:
+        # deferred releases strictly precede fresh arrivals at the same
+        # instant: while this step entered with due-but-unreleased jobs,
+        # hold arrivals for the next same-time step — the oracle admits
+        # (and enqueues) every release chunk before popping a coincident
+        # arrival event, so an arrival admitted in the same step as a
+        # release chunk would see a load snapshot missing that chunk's
+        # not-yet-drained roots
+        elig = elig & ~hold
     n_adm = elig.sum()
 
     def _net_cost():
@@ -436,11 +476,33 @@ def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
     def admit(args):
         jobs, farm, sched = args
         JT = jobs.status.shape[0]
+        if _deferral_on(cfg):
+            # carbon-aware deferral: deferrable jobs arriving while the
+            # carbon/price signal exceeds the threshold are NOT admitted;
+            # they park with a release time (solved sinusoid down-crossing
+            # or their deadline, whichever first) that becomes an event
+            # candidate.  A release candidate at/before now — or none at
+            # all — admits immediately, so deferral never deadlocks.
+            tcfg = cfg.thermal
+            jc = jnp.clip(jid, 0, J - 1)
+            sig = thermal_mod.defer_signal_now(tcfg, state.t)
+            rel = thermal_mod.next_release_time(tcfg, state.t)
+            cand = jnp.minimum(rel.astype(cfg.time_dtype),
+                               jobs.deadline[jc])
+            dfr = (elig & jobs.deferrable[jc]
+                   & (sig > tcfg.defer_threshold)
+                   & (cand > state.t) & (cand < INF / 2))
+            jobs = replace(jobs, admit_at=jobs.admit_at.at[
+                jnp.where(dfr, jid, J)].set(
+                jnp.where(dfr, cand, INF), mode="drop"))
+            adm = elig & ~dfr
+        else:
+            adm = elig
         tids = j0 * T + jnp.arange(K * T)                  # flat task ids
         in_range = tids < JT
         sc = jnp.where(in_range, tids, JT)                 # scatter sentinel
         gather = jnp.clip(tids, 0, JT - 1)
-        elig_t = jnp.repeat(elig, T)
+        elig_t = jnp.repeat(adm, T)
         is_valid = jobs.valid[gather] & elig_t & in_range
 
         root = is_valid & (jobs.dep_count[gather] <= 0)
@@ -503,6 +565,90 @@ def _apply_arrival(state: SimState, cfg: SimConfig, tc=None):
     jobs, farm, sched = jax.lax.cond(
         n_adm > 0, admit, lambda a: a, (jobs, farm, sched))
     return replace(state, jobs=jobs, farm=farm, sched=sched)
+
+
+def _apply_releases(state: SimState, cfg: SimConfig, tc=None):
+    """Admit deferred jobs whose release time has come (CARBON_AWARE
+    only): up to cfg.arrivals_per_step per step in ascending job id, one
+    shared scheduler snapshot per step — mirroring batched arrival
+    admission, so a window's worth of deferred jobs spreads exactly like
+    a same-timestamp burst.  Leftover due jobs pin the next event to
+    ``now`` (their admit_at is a next-event candidate) and release on the
+    following step.  Runs BEFORE fresh-arrival admission: released jobs
+    always carry lower ids than jobs arriving now, so the READY drain's
+    ascending-tid order serves them first, matching the oracle's
+    release-then-arrive event order.
+
+    Also accrues the deferral telemetry: total deferred seconds, release
+    count, and a first-order grams-avoided estimate (marginal job energy
+    × the carbon-intensity drop between arrival and release)."""
+    jobs = state.jobs
+    now = state.t
+    due = (jobs.admit_at < INF / 2) & (jobs.admit_at <= now)
+
+    def release(args):
+        jobs, therm = args
+        farm, sched = state.farm, state.sched
+        J = jobs.arrival.shape[0]
+        T = cfg.tasks_per_job
+        JT = jobs.status.shape[0]
+        K = cfg.arrivals_per_step
+        jid_b, jvalid, _ = server.compact_mask(due, K)            # (K,)
+        jq = jnp.clip(jid_b, 0, J - 1)
+
+        tids = (jq[:, None] * T + jnp.arange(T)[None, :]).reshape(-1)
+        gather = jnp.clip(tids, 0, JT - 1)
+        valid_t = jnp.repeat(jvalid, T)
+        sc = jnp.where(valid_t, tids, JT)
+        is_valid = jobs.valid[gather] & valid_t
+        # BLOCKED check: only still-parked roots flip READY (a repeated
+        # release of an already-processed row must never re-run a task)
+        root = is_valid & (jobs.dep_count[gather] <= 0) \
+            & (jobs.status[gather] == TaskStatus.BLOCKED)
+
+        # per-job picks against one farm snapshot, with in-batch root
+        # commitments as extra load — the same machinery as the score-
+        # policy arrival batch (CARBON_AWARE places by load)
+        root_k = root.reshape(K, T)
+        extra = jnp.zeros((cfg.n_servers,), jnp.float32)
+        picks = []
+        for k in range(K):                         # static unroll, K small
+            srv_k, _ = scheduler.pick_server(farm, cfg, sched,
+                                             None, None, extra)
+            extra = extra.at[srv_k].add(
+                root_k[k].sum().astype(jnp.float32))
+            picks.append(srv_k)
+        srvs = jnp.repeat(jnp.stack(picks), T)
+        server_arr = jobs.server.at[sc].set(
+            jnp.where(is_valid, srvs, jobs.server[gather]), mode="drop")
+        status = jobs.status.at[sc].set(
+            jnp.where(root, TaskStatus.READY, jobs.status[gather]),
+            mode="drop")
+        admit_at = jobs.admit_at.at[jnp.where(jvalid, jid_b, J)].set(
+            INF, mode="drop")
+        jobs = replace(jobs, server=server_arr, status=status,
+                       admit_at=admit_at)
+
+        tcfg = cfg.thermal
+        arr_j = jobs.arrival[jq]
+        waited = jnp.where(jvalid, (now - arr_j).astype(jnp.float32), 0.0)
+        ci_arr = thermal_mod.carbon_intensity_now(tcfg, arr_j)    # (K,)
+        ci_now = thermal_mod.carbon_intensity_now(tcfg, now)
+        sp = cfg.server_power
+        e_kwh = jobs.service.reshape(-1, T)[jq].sum(axis=1) \
+            * jnp.float32((sp.p_core_active - sp.p_core_idle) / 3.6e6)
+        avoided = jnp.where(jvalid, (ci_arr - ci_now) * e_kwh, 0.0)
+        therm = replace(
+            therm,
+            defer_seconds=therm.defer_seconds + waited.sum(),
+            defer_count=therm.defer_count
+            + jvalid.sum().astype(jnp.int32),
+            grams_avoided=therm.grams_avoided + avoided.sum())
+        return jobs, therm
+
+    jobs, therm = jax.lax.cond(due.any(), release, lambda a: a,
+                               (jobs, state.thermal))
+    return replace(state, jobs=jobs, thermal=therm)
 
 
 def _resolve_drops(state: SimState, cfg: SimConfig, dropped):
@@ -640,7 +786,17 @@ def _apply_events(state: SimState, cfg: SimConfig, tc, cheap: bool):
     state = _apply_completions(state, cfg, tc)
     if cfg.has_network and not cheap:
         state = _apply_flow_completions(state, cfg)
-    state = _apply_arrival(state, cfg, tc)
+    hold = None
+    if _deferral_on(cfg):
+        # deferred releases admit BEFORE fresh arrivals (lower job ids
+        # drain first; see _apply_releases); a step that entered with due
+        # releases also HOLDS fresh arrivals until the next same-time
+        # step, so the arrival's load snapshot sees the release train
+        # fully admitted AND drained (the oracle's event order)
+        admit_at = state.jobs.admit_at
+        hold = ((admit_at < INF / 2) & (admit_at <= state.t)).any()
+        state = _apply_releases(state, cfg, tc)
+    state = _apply_arrival(state, cfg, tc, hold)
     state = _drain_ready(state, cfg)
     state = _start_tasks(state, cfg)
 
@@ -732,6 +888,9 @@ def _consume_cheap(state: SimState, cfg: SimConfig, tc, t_next):
         farm, jobs, therm = thermal_mod.apply_throttle(
             state.farm, state.jobs, state.thermal, cfg, state.t)
         state = replace(state, farm=farm, jobs=jobs, thermal=therm)
+    if cfg.thermal.has_ctrl:
+        state = replace(state, thermal=thermal_mod.apply_setpoint_ctrl(
+            state.thermal, cfg, state.t))
     state = _apply_events(state, cfg, tc, cheap=True)
     return replace(state, events=state.events + 1)
 
@@ -771,6 +930,10 @@ def _full_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
         farm, jobs, therm = thermal_mod.apply_throttle(
             state.farm, state.jobs, state.thermal, cfg, state.t)
         state = replace(state, farm=farm, jobs=jobs, thermal=therm)
+    if cfg.thermal.has_ctrl:
+        # per-rack setpoint controller tick (cond-gated on the period)
+        state = replace(state, thermal=thermal_mod.apply_setpoint_ctrl(
+            state.thermal, cfg, state.t))
 
     state = _apply_events(state, cfg, tc, cheap=False)
 
@@ -816,6 +979,12 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
         raise ValueError(
             "SchedPolicy.THERMAL_AWARE requires cfg.thermal.enabled=True "
             "(placement would silently ignore temperatures)")
+    if cfg.sched_policy == SchedPolicy.CARBON_AWARE \
+            and not cfg.thermal.enabled:
+        raise ValueError(
+            "SchedPolicy.CARBON_AWARE requires cfg.thermal.enabled=True "
+            "(the deferral signal and telemetry live in the thermal/"
+            "carbon subsystem)")
     tc = net_mod.topo_consts(topo) if (topo is not None and
                                        cfg.has_network) else None
     if racks is None and topo is not None and cfg.thermal.enabled:

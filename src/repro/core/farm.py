@@ -46,6 +46,11 @@ class SimResult:
     throttle_seconds: float = 0.0   # summed over servers
     temps: Optional[np.ndarray] = None       # (N,) final temperatures
     peak_temps: Optional[np.ndarray] = None  # (N,) per-server peaks
+    setpoints: Optional[np.ndarray] = None   # (R,) final CRAC setpoints
+    # carbon-aware control plane (SchedPolicy.CARBON_AWARE)
+    deferred_jobs: int = 0          # jobs released after a deferral
+    deferred_seconds: float = 0.0   # summed deferral wait
+    carbon_g_avoided_est: float = 0.0  # first-order grams-avoided estimate
 
     @property
     def mean_power(self) -> float:
@@ -80,6 +85,10 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
             throttle_seconds=float(np.asarray(th.throttle_seconds).sum()),
             temps=temps,
             peak_temps=peaks,
+            setpoints=np.asarray(th.t_set),
+            deferred_jobs=int(th.defer_count),
+            deferred_seconds=float(th.defer_seconds),
+            carbon_g_avoided_est=float(th.grams_avoided),
         )
     return SimResult(
         sim_time=t,

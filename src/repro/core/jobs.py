@@ -31,10 +31,19 @@ class JobSpec:
     service: np.ndarray          # (T,) per-task service times
     edges: list                  # list of (parent, child, bytes)
     sla: float = INF             # latency deadline (sec); INF = no SLA
+    # carbon-aware control plane (SchedPolicy.CARBON_AWARE): a deferrable
+    # job arriving in a high-carbon/price window is held unadmitted until
+    # the signal's down-crossing or until arrival + defer_slack seconds,
+    # whichever comes first
+    deferrable: bool = False
+    defer_slack: float = INF     # seconds past arrival before admission
+                                 # is forced (INF = wait for the crossing)
 
 
-def dag_single(service: float, sla: float = INF) -> JobSpec:
-    return JobSpec(service=np.asarray([service]), edges=[], sla=sla)
+def dag_single(service: float, sla: float = INF, deferrable: bool = False,
+               defer_slack: float = INF) -> JobSpec:
+    return JobSpec(service=np.asarray([service]), edges=[], sla=sla,
+                   deferrable=deferrable, defer_slack=defer_slack)
 
 
 def dag_chain(services, edge_bytes: float = 0.0) -> JobSpec:
@@ -71,6 +80,15 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
                specs: list) -> JobTable:
     """Pad a list of JobSpecs (one per arrival) into a dense JobTable."""
     J, T, D = cfg.max_jobs, cfg.tasks_per_job, cfg.max_children
+    if cfg.n_tasks >= np.iinfo(np.int32).max:
+        # int32 indexing/FIFO-stamp guard: enqueue_seq stamps are bounded
+        # by the task-table width (each task enqueues at most once), so a
+        # table below 2^31 rows keeps every stamp comparison wrap-free
+        # regardless of max_events (server.try_start compares stamps as
+        # wrap-safe int32 diffs as a second line of defense)
+        raise ValueError(
+            f"max_jobs*tasks_per_job = {cfg.n_tasks} overflows int32 task "
+            f"ids / FIFO stamps (limit {np.iinfo(np.int32).max})")
     n = min(len(arrivals), J, len(specs))
 
     arr = np.full((J,), INF)
@@ -80,6 +98,8 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
     children = np.full((J, T, D), -1, np.int32)
     edge_bytes = np.zeros((J, T, D))
     sla = np.full((J,), INF)
+    deferrable = np.zeros((J,), bool)
+    deadline = np.full((J,), INF)
 
     for j in range(n):
         spec = specs[j]
@@ -88,6 +108,9 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
             raise ValueError(f"job {j}: {t} tasks > tasks_per_job={T}")
         arr[j] = arrivals[j]
         sla[j] = getattr(spec, "sla", INF)
+        deferrable[j] = getattr(spec, "deferrable", False)
+        slack = getattr(spec, "defer_slack", INF)
+        deadline[j] = arr[j] + slack if slack < INF / 2 else INF
         service[j, :t] = spec.service
         valid[j, :t] = True
         slot = np.zeros(T, np.int32)
@@ -118,4 +141,7 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
         job_finish=jnp.full((J,), INF, cfg.time_dtype),
         tasks_done=jnp.zeros((J,), jnp.int32),
         sla=jnp.asarray(sla, jnp.float32),
+        deferrable=jnp.asarray(deferrable),
+        deadline=jnp.asarray(deadline, cfg.time_dtype),
+        admit_at=jnp.full((J,), INF, cfg.time_dtype),
     )

@@ -113,6 +113,9 @@ def replica_stats(state_b, cfg: SimConfig):
             "energy_cost": np.asarray(th.cost),
             "peak_temp": np.asarray(th.t_peak).max(axis=1),
             "throttle_seconds": np.asarray(th.throttle_seconds).sum(axis=1),
+            "deferred_jobs": np.asarray(th.defer_count),         # (R,)
+            "deferred_seconds": np.asarray(th.defer_seconds),
+            "carbon_g_avoided_est": np.asarray(th.grams_avoided),
         })
     return out
 

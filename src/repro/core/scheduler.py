@@ -62,6 +62,9 @@ def pick_server(farm: ServerFarm, cfg: SimConfig, sched, net_cost=None,
         srv = jnp.where(ok.any(), idx[off], fb).astype(jnp.int32)
         return srv, (srv + 1) % N
 
+    # CARBON_AWARE deliberately falls through to the plain load score:
+    # its novelty is WHEN deferrable jobs admit (engine._apply_releases /
+    # the deferral gate in _apply_arrival), not WHERE they land
     score = load
     if cfg.sched_policy == SchedPolicy.NETWORK_AWARE and net_cost is not None:
         sleeping = (farm.srv_state == SrvState.PKG_C6) \

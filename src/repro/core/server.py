@@ -101,7 +101,7 @@ def begin_wake_mask(farm: ServerFarm, cfg: SimConfig, mask, now):
         wake_count=farm.wake_count + sleeping.astype(jnp.int32))
 
 
-def queued_rank(jobs: JobTable, cfg: SimConfig, queued):
+def queued_rank(jobs: JobTable, cfg: SimConfig, queued, q_seq):
     """(JT,) FIFO rank of each queued task among the queued tasks of ITS
     server (0 = head), by enqueue_seq; garbage where ~queued.
 
@@ -109,6 +109,13 @@ def queued_rank(jobs: JobTable, cfg: SimConfig, queued):
     FIFO order, so the rank is position minus the server run's first
     position — O(JT log JT) in task space, independent of N and with only
     JT-row scatters (vs the (N, Q) ring's core-space gathers/scatters).
+
+    Stamps sort by their wrap-safe int32 distance to the farm's CURRENT
+    counter ``q_seq``: live stamps were issued within the last JT < 2^31
+    pushes (a task enqueues at most once — build_jobs guards the table
+    width), so ``stamp - q_seq`` is a strictly negative int32 even when
+    the counter has wrapped, and FIFO order survives wrap-around instead
+    of silently inverting at the 2^31 boundary.
     """
     JT = queued.shape[0]
     N = cfg.n_servers
@@ -118,7 +125,8 @@ def queued_rank(jobs: JobTable, cfg: SimConfig, queued):
     # 2^31 (a 20K-server farm with a ~100K-task table); seq (< JT) and
     # srv (< N) are individually safe
     imax = jnp.iinfo(jnp.int32).max
-    by_seq = jnp.argsort(jnp.where(queued, jobs.enqueue_seq, imax))
+    rel_seq = jobs.enqueue_seq - q_seq          # wrap-safe, < 0 for live
+    by_seq = jnp.argsort(jnp.where(queued, rel_seq, imax))
     order = by_seq[jnp.argsort(
         jnp.where(queued[by_seq], srv[by_seq], imax), stable=True)]
     srv_o = jnp.where(queued[order], srv[order], N)     # sentinel last
@@ -225,7 +233,8 @@ def try_start(farm: ServerFarm, cfg: SimConfig, jobs: JobTable, now,
 
         def dense(args):
             farm, jobs = args
-            return apply_start(farm, jobs, queued_rank(jobs, cfg, queued))
+            return apply_start(farm, jobs,
+                               queued_rank(jobs, cfg, queued, farm.q_seq))
 
         if JT <= COMPACT_Q:
             return dense(args)
@@ -239,11 +248,13 @@ def try_start(farm: ServerFarm, cfg: SimConfig, jobs: JobTable, now,
             srv_b = jnp.where(valid, srv[tq], N)
             seq_b = jobs.enqueue_seq[tq]
             # pairwise FIFO rank inside the batch — equal to the dense
-            # rank because the batch covers every queued task
+            # rank because the batch covers every queued task; the
+            # compare is the wrap-safe int32 diff (see queued_rank)
             same = valid[None, :] & valid[:, None] \
                 & (srv_b[None, :] == srv_b[:, None])
-            rank_b = jnp.sum(same & (seq_b[None, :] < seq_b[:, None]),
-                             axis=1).astype(jnp.int32)
+            rank_b = jnp.sum(
+                same & ((seq_b[None, :] - seq_b[:, None]) < 0),
+                axis=1).astype(jnp.int32)
             rank = jnp.zeros((JT,), jnp.int32).at[
                 jnp.where(valid, tids, JT)].set(rank_b, mode="drop")
             return apply_start(farm, jobs, rank)

@@ -97,7 +97,7 @@ def window_values(state, cfg: SimConfig, dt, p_busy=None,
 
     ``p_busy`` / ``onehot`` optionally supply the precomputed per-server
     (power, busy-count) pair and (N, NUM) state one-hot, and
-    ``thermal_ctx`` the (target, alpha, t_end) RC pieces — the engine's
+    ``thermal_ctx`` the (target, alpha, t_end, p_cool) RC/CRAC pieces — the engine's
     advance shares one evaluation between energy accrual, these window
     columns, and the thermal integrator instead of recomputing the power
     select, state comparisons, and RC exponential in each subsystem."""
@@ -124,9 +124,7 @@ def window_values(state, cfg: SimConfig, dt, p_busy=None,
     head = jnp.stack([jnp.float32(1.0), active, awake, qdepth, p_srv, p_sw])
     if tcfg.enabled:
         t_srv = state.thermal.t_srv
-        p_cool = thermal_mod.cooling_power(p_srv + p_sw, tcfg)
         ici, ipr = thermal_mod.carbon_price_integrals(tcfg, state.t, dt)
-        kw = (p_srv + p_sw + p_cool) * jnp.float32(1.0e-3)
         # temperature varies exponentially WITHIN the interval, so the
         # mean column integrates the closed form (∫T dt = target·dt +
         # (T0−target)·τ·(1−e^{−dt/τ}), averaged over servers) and the max
@@ -135,11 +133,14 @@ def window_values(state, cfg: SimConfig, dt, p_busy=None,
         if thermal_ctx is None:
             p_vec = p_busy[0]
             target = p_vec * tcfg.r_th \
-                + thermal_mod.inlet_temps(state.thermal, tcfg)
+                + thermal_mod.inlet_temps(state.thermal, tcfg, state.t)
             alpha = 1.0 - jnp.exp(-dtf / tcfg.tau_th)
             t_end = t_srv + (target - t_srv) * alpha
+            p_cool = thermal_mod.cooling_power(p_vec, p_sw,
+                                               state.thermal, tcfg)
         else:
-            target, alpha, t_end = thermal_ctx
+            target, alpha, t_end, p_cool = thermal_ctx
+        kw = (p_srv + p_sw + p_cool) * jnp.float32(1.0e-3)
         mean_int = target.mean() * dtf \
             + (t_srv - target).mean() * tcfg.tau_th * alpha
         max_interval = jnp.maximum(t_srv, t_end).max()

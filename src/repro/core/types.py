@@ -80,6 +80,11 @@ class SchedPolicy:
     PROVISIONED = 3        # threshold-driven active-set (case study A)
     WASP_POOLS = 4         # two-pool workload adaptive (case study C)
     THERMAL_AWARE = 5      # coolest eligible server (thermal subsystem)
+    CARBON_AWARE = 6       # LOAD_BALANCE placement + deferrable jobs held
+                           # while the carbon/price signal is above
+                           # ThermalConfig.defer_threshold (thermal ctrl
+                           # plane); released at the solved sinusoid
+                           # down-crossing or at their deadline
 
 
 class SleepPolicy:
@@ -173,6 +178,43 @@ class ThermalConfig:
     r_th: float = 0.25          # °C per Watt of server power
     tau_th: float = 60.0        # thermal time constant (seconds)
     t_inlet: float = 22.0       # CRAC supply / cold-aisle setpoint (°C)
+    # --- control plane -----------------------------------------------
+    # per-rack CRAC supply setpoints: None = one uniform setpoint
+    # (t_inlet, the static path — COP folds to a Python constant at trace
+    # time); a scalar or length-R tuple makes the setpoints *state*
+    # (ThermalState.t_set) and COP a per-rack quadratic evaluated
+    # in-trace, so each rack's supply temperature carries its own
+    # cooling-efficiency cost
+    t_setpoint: object = None
+    # diurnal ambient sinusoid added onto the supply/cold-aisle
+    # temperature: amb(t) = ambient_swing·sin(2π(t+ambient_phase)/
+    # ambient_period) °C.  The RC integration stays exact per interval —
+    # the inlet is held piecewise constant (evaluated at interval start),
+    # the same operator split as the rack recirculation — and the
+    # throttle crossing solve honors the time-varying target.
+    ambient_swing: float = 0.0
+    ambient_period: float = 86400.0
+    ambient_phase: float = 0.0
+    # simple per-rack setpoint controller: every ctrl_period seconds (a
+    # real event) each rack's setpoint steps DOWN by ctrl_step when its
+    # hottest server exceeds ctrl_target, UP when it sits below
+    # ctrl_target - ctrl_band (cheaper cooling via a better COP), clipped
+    # into [ctrl_min, ctrl_max].  ctrl_period = 0 disables.
+    ctrl_period: float = 0.0
+    ctrl_target: float = 55.0
+    ctrl_band: float = 2.0
+    ctrl_step: float = 1.0
+    ctrl_min: float = 12.0
+    ctrl_max: float = 27.0
+    # carbon-aware deferral (SchedPolicy.CARBON_AWARE): deferrable jobs
+    # arriving while the defer_signal ("carbon" or "price") sits above
+    # defer_threshold are held unadmitted and released at the solved
+    # sinusoid down-crossing or at their deadline, whichever is earlier
+    # (a deadline at/before now — or no finite release candidate at all —
+    # admits immediately, so deferral can never deadlock).  INF = never
+    # defer.
+    defer_threshold: float = INF
+    defer_signal: str = "carbon"
     # rack recirculation: inlet_i = t_inlet + recirc·rack_mean(T − t_inlet)
     recirc: float = 0.2
     rack_size: int = 8          # servers per rack (rack id = i // rack_size
@@ -221,6 +263,27 @@ class ThermalConfig:
     @property
     def throttling(self) -> bool:
         return self.enabled and self.t_throttle < INF / 2
+
+    @property
+    def has_ctrl(self) -> bool:
+        """Setpoint controller armed (control-period ticks are events)."""
+        return self.enabled and self.ctrl_period > 0.0
+
+    @property
+    def per_rack(self) -> bool:
+        """Setpoints live in ThermalState (in-trace per-rack COP) instead
+        of folding to the static t_inlet constant."""
+        return self.enabled and (self.t_setpoint is not None
+                                 or self.has_ctrl)
+
+    @property
+    def ambient_on(self) -> bool:
+        return self.enabled and self.ambient_swing != 0.0
+
+    @property
+    def deferral(self) -> bool:
+        """CARBON_AWARE deferral armed (a finite signal threshold)."""
+        return self.enabled and self.defer_threshold < INF / 2
 
 
 @dataclass(frozen=True)
@@ -377,6 +440,12 @@ class JobTable:
     job_finish: jnp.ndarray         # (J,) completion time (INF if not done)
     tasks_done: jnp.ndarray         # (J,) per-job finished-task count
     sla: jnp.ndarray                # (J,) latency deadline (INF = no SLA)
+    deferrable: jnp.ndarray         # (J,) bool — may be carbon-deferred
+    deadline: jnp.ndarray           # (J,) absolute latest ADMIT time for a
+                                    # deferred job (INF = no deadline)
+    admit_at: jnp.ndarray           # (J,) release time of a currently
+                                    # deferred job (INF = not deferred); the
+                                    # min is a next_event_time candidate
 
 
 @pytree_dataclass
@@ -442,11 +511,22 @@ class ThermalState:
     rack_id: jnp.ndarray            # (N,) server -> rack map (constant)
     rack_onehot: jnp.ndarray        # (R, N) f32 membership (constant)
     rack_inv: jnp.ndarray           # (R,) 1/servers-per-rack (constant)
+    t_set: jnp.ndarray              # (R,) per-rack CRAC supply setpoint
+                                    # (°C; state — the setpoint controller
+                                    # moves it on a control period)
+    ctrl_next: jnp.ndarray          # () next setpoint-controller tick (a
+                                    # next_event_time candidate; INF = off)
     t_peak: jnp.ndarray             # (N,) running max temperature
     throttle_seconds: jnp.ndarray   # (N,) time spent throttled
     cool_energy: jnp.ndarray        # () CRAC joules
     carbon_g: jnp.ndarray           # () grams CO2 (IT + cooling)
     cost: jnp.ndarray               # () electricity cost ($)
+    defer_seconds: jnp.ndarray      # () summed job deferral time (carbon-
+                                    # aware control plane)
+    defer_count: jnp.ndarray        # () jobs released after a deferral
+    grams_avoided: jnp.ndarray      # () first-order estimate of CO2 grams
+                                    # avoided by deferral: Δintensity at
+                                    # (defer, release) × marginal job energy
 
 
 @pytree_dataclass

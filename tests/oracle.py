@@ -33,6 +33,17 @@ the same closed-form exponential between events (rack-recirculated inlet
 held piecewise constant), CRAC cooling energy, closed-form diurnal
 carbon/cost integrals, and threshold-crossing throttle events with
 hysteresis that stretch in-flight work by the frequency ratio.
+
+Control plane (PR 5): per-rack CRAC setpoints (``t_setpoint`` /
+``ThermalState.t_set``) with per-rack quadratic COP, the diurnal ambient
+sinusoid on the supply temperature (held piecewise constant per interval,
+honored by the crossing solve), setpoint-controller ticks as events, and
+SchedPolicy.CARBON_AWARE deferral: deferrable jobs arriving while the
+carbon/price signal is above ``defer_threshold`` are parked and released
+at the solved sinusoid down-crossing or their deadline — release events
+sit between timers and arrivals (released job ids are always lower than
+now-arriving ids, matching the engine's release-before-arrival order) and
+admit in arrivals_per_step chunks against shared snapshots.
 """
 from __future__ import annotations
 
@@ -149,13 +160,23 @@ class OracleSim:
             if racks is None:
                 racks = np.arange(N) // max(tcfg.rack_size, 1)
             _, self.rack = np.unique(np.asarray(racks), return_inverse=True)
-            self.temp = np.full(N, tcfg.t_inlet, float)
-            self.t_peak = np.full(N, tcfg.t_inlet, float)
+            R = int(self.rack.max()) + 1
+            sp = tcfg.t_inlet if tcfg.t_setpoint is None else tcfg.t_setpoint
+            self.t_set = np.broadcast_to(
+                np.asarray(sp, float), (R,)).copy()
+            t0 = self.t_set[self.rack] + self._ambient(0.0)
+            self.temp = t0.copy()
+            self.t_peak = t0.copy()
             self.throttle_seconds = np.zeros(N)
             self.cool_energy = 0.0
             self.carbon_g = 0.0
             self.cost = 0.0
             self.cop = tcfg.cop
+            self.ctrl_next = tcfg.ctrl_period if tcfg.has_ctrl else INF
+        # carbon-aware deferral (SchedPolicy.CARBON_AWARE)
+        self.defer_count = 0
+        self.defer_seconds = 0.0
+        self.grams_avoided = 0.0
 
     # ---- helpers ------------------------------------------------------
     def _wake_latency(self, state):
@@ -163,12 +184,55 @@ class OracleSim:
         return {SrvState.PKG_C6: sp.t_wake_pkg_c6, SrvState.S3: sp.t_wake_s3,
                 SrvState.OFF: sp.t_wake_off}.get(state, 0.0)
 
+    def _ambient(self, t):
+        tcfg = self.cfg.thermal
+        if tcfg.ambient_swing == 0.0:
+            return 0.0
+        w = 2.0 * math.pi / tcfg.ambient_period
+        return tcfg.ambient_swing * math.sin(w * (t + tcfg.ambient_phase))
+
     def _inlet(self):
         tcfg = self.cfg.thermal
-        excess = self.temp - tcfg.t_inlet
+        if not tcfg.per_rack and not tcfg.ambient_on:
+            excess = self.temp - tcfg.t_inlet
+            means = np.bincount(self.rack, weights=excess) \
+                / np.bincount(self.rack)
+            return tcfg.t_inlet + tcfg.recirc * means[self.rack]
+        base = self.t_set[self.rack] + self._ambient(self.t)
+        excess = self.temp - base
         means = np.bincount(self.rack, weights=excess) \
             / np.bincount(self.rack)
-        return tcfg.t_inlet + tcfg.recirc * means[self.rack]
+        return base + tcfg.recirc * means[self.rack]
+
+    def _cop_at(self, t_sup):
+        tcfg = self.cfg.thermal
+        return tcfg.cop_a * t_sup * t_sup + tcfg.cop_b * t_sup + tcfg.cop_c
+
+    def _cooling_power(self, p):
+        """CRAC watts for per-server IT load ``p`` (no switch-side load in
+        the oracle's thermal scenarios) — mirrors thermal.cooling_power."""
+        tcfg = self.cfg.thermal
+        if not tcfg.per_rack:
+            return p.sum() / self.cop
+        rack_p = np.bincount(self.rack, weights=p)
+        return (rack_p / self._cop_at(self.t_set)).sum()
+
+    def _apply_ctrl(self):
+        """Setpoint-controller tick — mirrors thermal.apply_setpoint_ctrl
+        (runs after accrue+throttle whenever t reaches ctrl_next)."""
+        tcfg = self.cfg.thermal
+        if not (self.thermal_on and tcfg.has_ctrl) \
+                or self.t < self.ctrl_next:
+            return
+        rack_max = np.full(self.t_set.shape[0], -INF)
+        np.maximum.at(rack_max, self.rack, self.temp)
+        down = rack_max > tcfg.ctrl_target
+        up = ~down & (rack_max < tcfg.ctrl_target - tcfg.ctrl_band)
+        self.t_set = np.clip(
+            self.t_set - np.where(down, tcfg.ctrl_step, 0.0)
+            + np.where(up, tcfg.ctrl_step, 0.0),
+            tcfg.ctrl_min, tcfg.ctrl_max)
+        self.ctrl_next = self.ctrl_next + tcfg.ctrl_period
 
     def _powers(self):
         return np.asarray([s.power() for s in self.servers])
@@ -189,7 +253,7 @@ class OracleSim:
             thr_mask = np.asarray([s.throttled for s in self.servers])
             self.throttle_seconds += thr_mask * dt
             p_it = p.sum()
-            p_cool = p_it / self.cop
+            p_cool = self._cooling_power(p)
             self.cool_energy += p_cool * dt
             kw = (p_it + p_cool) * 1e-3
             self.carbon_g += kw * _rate_integral(
@@ -261,6 +325,61 @@ class OracleSim:
                                        (s.core_end[c], 0, "complete",
                                         (i, c)))
 
+    # ---- carbon-aware deferral ---------------------------------------
+    def _defer_params(self):
+        tcfg = self.cfg.thermal
+        if tcfg.defer_signal == "price":
+            return (tcfg.price_base, tcfg.price_swing, tcfg.price_period,
+                    tcfg.price_phase)
+        return (tcfg.carbon_base, tcfg.carbon_swing, tcfg.carbon_period,
+                tcfg.carbon_phase)
+
+    def _signal(self, t):
+        base, swing, period, phase = self._defer_params()
+        w = 2.0 * math.pi / period
+        return base * (1.0 + swing * math.sin(w * (t + phase)))
+
+    def _carbon_now(self, t):
+        tcfg = self.cfg.thermal
+        w = 2.0 * math.pi / tcfg.carbon_period
+        return tcfg.carbon_base * (1.0 + tcfg.carbon_swing
+                                   * math.sin(w * (t + tcfg.carbon_phase)))
+
+    def _next_release(self, t):
+        """Earliest down-crossing of the deferral signal below the
+        threshold — mirrors thermal.next_release_time."""
+        base, swing, period, phase = self._defer_params()
+        thr = self.cfg.thermal.defer_threshold
+        if base <= 0.0 or swing == 0.0 or thr >= INF / 2:
+            return INF
+        s = (thr / base - 1.0) / swing
+        if s >= 1.0 or s <= -1.0:
+            return INF
+        w = 2.0 * math.pi / period
+        theta_dn = math.pi - math.asin(s)
+        k = math.ceil((w * (t + phase) - theta_dn) / (2.0 * math.pi))
+        return (theta_dn + 2.0 * math.pi * k) / w - phase
+
+    def _maybe_defer(self, j):
+        """True (and a release event pushed) when job ``j`` arriving NOW
+        gets carbon-deferred instead of admitted."""
+        cfg = self.cfg
+        if cfg.sched_policy != SchedPolicy.CARBON_AWARE:
+            return False
+        tcfg = cfg.thermal
+        spec = self.specs[j]
+        if not getattr(spec, "deferrable", False):
+            return False
+        if not self._signal(self.t) > tcfg.defer_threshold:
+            return False
+        slack = getattr(spec, "defer_slack", INF)
+        deadline = self.arrivals[j] + slack if slack < INF / 2 else INF
+        cand = min(self._next_release(self.t), deadline)
+        if not (self.t < cand < INF / 2):
+            return False
+        heapq.heappush(self.events, (cand, 2.5, "release", j))
+        return True
+
     # ---- scheduling / queues -----------------------------------------
     def _pick(self, load_snapshot):
         cfg = self.cfg
@@ -279,16 +398,20 @@ class OracleSim:
         best = min(range(cfg.n_servers), key=lambda i: scores[i])
         return best
 
-    def _admit_chunk(self, jobs, T):
+    def _admit_chunk(self, jobs, T, allow_defer=True):
         """Admit one chunk of same-timestamp jobs against a single farm
         snapshot (the engine's batched admission), then enqueue the
         chunk's roots in task-id order.  For score policies, each job's
         committed roots count as load for the NEXT job's pick, matching
         the engine's in-batch increments (and the old one-job-per-step
-        behavior, where roots drained between admits)."""
+        behavior, where roots drained between admits).  Deferred jobs
+        (CARBON_AWARE) consume a chunk slot but commit nothing — exactly
+        like the engine's in-batch deferral mask."""
         load_snapshot = [s.load() for s in self.servers]
         roots = []
         for j in jobs:
+            if allow_defer and self._maybe_defer(j):
+                continue
             spec = self.specs[j]
             nt = len(spec.service)
             self.remaining[j] = nt
@@ -436,6 +559,11 @@ class OracleSim:
         for srv in range(cfg.n_servers):
             self._idle_edge(srv)
 
+        # setpoint-controller ticks are events (the engine advances to
+        # ctrl_next exactly; the update itself runs post-accrue below)
+        if self.thermal_on and cfg.thermal.has_ctrl:
+            heapq.heappush(self.events, (self.ctrl_next, -1, "ctrl", None))
+
         while self.events:
             # throttle-threshold crossings are events of their own: the
             # engine solves the RC exponential for the crossing time
@@ -443,11 +571,48 @@ class OracleSim:
             if t_cross < self.events[0][0]:
                 self._accrue_all(t_cross)
                 self._apply_throttle()
+                self._apply_ctrl()
                 continue
 
             t_next, _, kind, payload = heapq.heappop(self.events)
             self._accrue_all(t_next)
             self._apply_throttle()
+            self._apply_ctrl()
+
+            if kind == "ctrl":
+                # the tick itself already ran in _apply_ctrl; keep the
+                # clock armed while jobs remain
+                if len(self.job_finish) < n_jobs:
+                    heapq.heappush(self.events,
+                                   (self.ctrl_next, -1, "ctrl", None))
+                self._recompute_rates()
+                continue
+
+            if kind == "release":
+                # all same-time releases, lowest job id first, admitted in
+                # arrivals_per_step chunks against shared snapshots (the
+                # engine's release pass: compact_mask ascending ids, one
+                # chunk per step)
+                batch = [payload]
+                while self.events and self.events[0][0] == t_next \
+                        and self.events[0][2] == "release":
+                    batch.append(heapq.heappop(self.events)[3])
+                batch.sort()
+                sp = cfg.server_power
+                K = max(int(cfg.arrivals_per_step), 1)
+                for c0 in range(0, len(batch), K):
+                    chunk = batch[c0:c0 + K]
+                    for j in chunk:
+                        self.defer_count += 1
+                        self.defer_seconds += self.t - self.arrivals[j]
+                        e_kwh = float(np.sum(self.specs[j].service)) \
+                            * (sp.p_core_active - sp.p_core_idle) / 3.6e6
+                        self.grams_avoided += e_kwh * (
+                            self._carbon_now(self.arrivals[j])
+                            - self._carbon_now(self.t))
+                    self._admit_chunk(chunk, T, allow_defer=False)
+                self._recompute_rates()
+                continue
 
             if kind == "arrive":
                 # the engine admits same-timestamp jobs in passes of

@@ -176,6 +176,40 @@ def test_macro_step_congested_queue_argsort_fallback():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_macro_step_dag_immediate_edges_coalesce():
+    """ROADMAP item: with a network configured, a completing task whose
+    DAG edges all resolve IMMEDIATELY (zero-byte edges here, split across
+    servers by ROUND_ROBIN so colocating is not what saves them) must not
+    stop the cheap-core chew — final states are bit-identical for K in
+    {1, 8} and match the oracle, while flows never spawn (nothing routes
+    for a zero-byte edge)."""
+    n_jobs = 40
+    cfg0 = SimConfig(n_servers=4, n_cores=2, max_jobs=64, tasks_per_job=3,
+                     max_children=2, max_flows=64, local_q=32,
+                     sched_policy=SchedPolicy.ROUND_ROBIN,
+                     sleep_policy=SleepPolicy.ALWAYS_ON,
+                     has_network=True, comm_model=0, max_events=60_000)
+    topo = topology.star(cfg0.n_servers, link_cap=1.0e8)
+    rng = np.random.default_rng(4)
+    arr = workload.poisson_arrivals(30.0, n_jobs, seed=6)
+    specs = [dag_chain(rng.uniform(0.01, 0.04, size=3), edge_bytes=0.0)
+             for _ in range(n_jobs)]
+    outs = {k: _run_engine(dataclasses.replace(cfg0, events_per_step=k),
+                           arr, specs, topo=topo) for k in (1, 8)}
+    _assert_states_equal(outs[1], outs[8], "dag-immediate K=8 vs K=1")
+    final = outs[1]
+    orc = OracleSim(cfg0, arr, specs, topo=topo).run()
+    fin = np.asarray(final.jobs.job_finish)
+    lat = np.sort((fin - np.asarray(final.jobs.arrival))[fin < INF / 2])
+    assert len(lat) == n_jobs == len(orc.job_finish)
+    np.testing.assert_allclose(lat, np.sort(orc.latencies()),
+                               rtol=1e-4, atol=1e-4)
+    # nothing routed: the chains resolved entirely through the immediate
+    # (in-core) edge path
+    assert not bool(np.asarray(final.flows.active).any())
+    assert int(final.flows.flows_dropped) == 0
+
+
 @pytest.mark.parametrize("events_per_step", [1, 8])
 def test_use_kernel_advance_matches_jnp(events_per_step):
     """cfg.use_kernel routes the advance through the fused Pallas kernel

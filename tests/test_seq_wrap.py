@@ -1,0 +1,84 @@
+"""FIFO-stamp int32 wrap semantics (server.py).
+
+``ServerFarm.q_seq`` / ``JobTable.enqueue_seq`` are monotone int32
+counters; the seed compared raw stamps, which silently inverts FIFO order
+once the counter passes 2^31.  The pinned semantics are two-fold:
+
+  * comparisons are WRAP-SAFE: ranks come from the int32 difference to
+    the farm's current counter (``stamp - q_seq`` / pairwise diffs), which
+    is exact whenever live stamps span < 2^31 pushes — guaranteed because
+    a task enqueues at most once, so total stamps <= the task-table width;
+  * the host-side guard: ``build_jobs`` refuses task tables at/over 2^31
+    rows, the one config that could break the span precondition (tied to
+    max_events only indirectly: the stamp count is bounded by the table,
+    not the event budget).
+
+Both try_start rank paths (the dense argsort rank and the COMPACT_Q
+pairwise batch) are exercised with a q_seq parked just under the wrap
+boundary so the stamps straddle 2^31 - 1 -> -2^31.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import server
+from repro.core.jobs import build_jobs, dag_single
+from repro.core.types import (SimConfig, SleepPolicy, TaskStatus, init_farm,
+                              replace)
+
+IMAX = np.iinfo(np.int32).max
+
+
+def _wrapped_queue(cfg, n_tasks):
+    """A farm whose q_seq sits 2 pushes before the wrap, with n_tasks
+    tasks pushed onto server 0 in id order (stamps straddle the wrap)."""
+    farm = init_farm(cfg)
+    farm = replace(farm, q_seq=jnp.asarray(IMAX - 1, jnp.int32))
+    jt = build_jobs(cfg, np.zeros(n_tasks),
+                    [dag_single(1.0) for _ in range(n_tasks)])
+    jt = replace(jt, server=jt.server.at[:n_tasks].set(0),
+                 status=jt.status.at[:n_tasks].set(TaskStatus.READY))
+    tids = jnp.arange(n_tasks, dtype=jnp.int32)
+    farm, ok, seq = server.queue_push_many(
+        farm, cfg, jnp.zeros(n_tasks, jnp.int32), tids,
+        jnp.ones(n_tasks, bool))
+    assert bool(ok.all())
+    # stamps wrapped negative past the boundary
+    assert int(seq[0]) == IMAX - 1 and int(seq[-1]) < 0
+    jt = replace(jt, status=jt.status.at[:n_tasks].set(TaskStatus.QUEUED),
+                 enqueue_seq=jt.enqueue_seq.at[:n_tasks].set(seq))
+    return farm, jt
+
+
+@pytest.mark.parametrize("max_jobs", [16, 256])
+def test_fifo_order_survives_seq_wrap(max_jobs):
+    """One single-core server, 4 queued tasks with stamps straddling the
+    int32 wrap: the FIRST-pushed task must start, under both the dense
+    argsort rank (small table) and the COMPACT_Q pairwise rank (table
+    wider than the compact batch)."""
+    cfg = SimConfig(n_servers=1, n_cores=1, local_q=8, max_jobs=max_jobs,
+                    tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON)
+    farm, jt = _wrapped_queue(cfg, 4)
+    farm2, jt2 = server.try_start(farm, cfg, jt,
+                                  jnp.zeros((), cfg.time_dtype))
+    status = np.asarray(jt2.status[:4])
+    assert status[0] == TaskStatus.RUNNING          # first pushed runs
+    assert (status[1:] == TaskStatus.QUEUED).all()  # raw compare would
+    assert int(farm2.q_len[0]) == 3                 # start task 2 instead
+
+
+def test_queued_rank_wrap_safe_direct():
+    cfg = SimConfig(n_servers=1, n_cores=4, local_q=8, max_jobs=16,
+                    tasks_per_job=1, sleep_policy=SleepPolicy.ALWAYS_ON)
+    farm, jt = _wrapped_queue(cfg, 4)
+    queued = jt.status == TaskStatus.QUEUED
+    rank = np.asarray(server.queued_rank(jt, cfg, queued, farm.q_seq))
+    np.testing.assert_array_equal(rank[:4], [0, 1, 2, 3])
+
+
+def test_build_jobs_guards_int32_task_table():
+    cfg = SimConfig(max_jobs=2 ** 27, tasks_per_job=16)   # 2^31 tasks
+    with pytest.raises(ValueError, match="overflows int32"):
+        build_jobs(cfg, np.empty(0), [])

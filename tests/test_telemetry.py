@@ -182,6 +182,52 @@ def test_replica_stats_empty_replica_no_warnings():
     assert np.isnan(stats["p99_latency"]).all()
 
 
+def test_empty_histogram_summary_is_nan_clean():
+    """A run that bins ZERO jobs (here: everything still carbon-deferred
+    when max_events truncates the run) must summarize to NaN percentiles
+    and a NaN energy·delay product with no numpy RuntimeWarnings — the
+    empty-histogram path of telemetry.summarize/hist_percentile."""
+    from repro.core.types import SchedPolicy, ThermalConfig
+    tcfg = ThermalConfig(enabled=True, carbon_base=300.0, carbon_swing=0.2,
+                         carbon_period=600.0, defer_threshold=100.0)
+    cfg = SimConfig(n_servers=2, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sched_policy=SchedPolicy.CARBON_AWARE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=2, events_per_step=1,  # stop mid-deferral
+                    thermal=tcfg, telemetry=TEL)
+    specs = [dag_single(1.0, deferrable=True, defer_slack=1e6)
+             for _ in range(4)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        res = farm.simulate(cfg, np.zeros(4), specs)
+        ts = res.telemetry
+    assert res.n_finished == 0 and ts.jobs_binned == 0
+    for v in (ts.job_p50, ts.job_p95, ts.job_p99, ts.task_p50,
+              ts.mean_latency, ts.energy_delay_product):
+        assert np.isnan(v)
+    assert ts.sla_total == 0 and ts.tail_violations == 0
+
+    # zero-arrival run: histograms AND windows are empty
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        res0 = farm.simulate(
+            SimConfig(n_servers=2, n_cores=1, max_jobs=16,
+                      tasks_per_job=1, max_events=100, telemetry=TEL),
+            np.empty(0), [])
+        ts0 = res0.telemetry
+        # the whole window block divides by an all-NaN occupancy
+        assert ts0.n_windows_used == 0
+        assert np.isnan(ts0.active_jobs).all()
+    assert np.isnan(ts0.job_p50) and np.isnan(ts0.energy_delay_product)
+
+    # direct empty-histogram helpers
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        h = np.zeros((3, 64))
+        assert np.isnan(telemetry.hist_percentile(h, 1e-4, 10.0, 95)).all()
+        assert np.isnan(telemetry.hist_mean(h, 1e-4, 10.0)).all()
+
+
 def test_summary_qos_and_ed_product():
     cfg, res = _mmk_run()
     ts = res.telemetry

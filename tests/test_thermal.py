@@ -248,6 +248,270 @@ def test_topology_rack_grouping():
     assert len(np.unique(topology.rack_of_servers(cc, rack_size=4))) == 2
 
 
+def test_per_rack_setpoints_different_steady_states():
+    """Two racks at different CRAC setpoints: with recirc off, each
+    server's fixed point is its OWN rack's setpoint + P·r_th, and the
+    cooling energy integrates each rack's load at its own quadratic COP
+    (colder supply => worse COP => more CRAC joules for the same IT)."""
+    tcfg = ThermalConfig(enabled=True, r_th=0.5, tau_th=0.05, recirc=0.0,
+                         rack_size=1, t_setpoint=(16.0, 26.0))
+    cfg = SimConfig(n_servers=2, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=10_000,
+                    thermal=tcfg)
+    # both servers busy for 5 s (100 time constants): fixed points reached
+    res = farm_mod.simulate(cfg, np.asarray([0.0, 0.0]),
+                            [dag_single(5.0), dag_single(5.0)])
+    sp = cfg.server_power
+    p_busy = sp.p_base + sp.p_core_active
+    for i, t_set in enumerate((16.0, 26.0)):
+        assert res.peak_temps[i] == pytest.approx(
+            t_set + p_busy * tcfg.r_th, rel=1e-4)
+    # per-rack COP: quadratic at each rack's setpoint, NOT the t_inlet
+    # constant — the run's CRAC energy must reflect both
+    def cop(t):
+        return tcfg.cop_a * t * t + tcfg.cop_b * t + tcfg.cop_c
+    orc = OracleSim(cfg, np.asarray([0.0, 0.0]),
+                    [dag_single(5.0), dag_single(5.0)]).run()
+    assert res.cooling_energy == pytest.approx(orc.cool_energy, rel=2e-3)
+    assert cop(16.0) < cop(26.0)     # colder supply is less efficient
+    np.testing.assert_array_equal(res.setpoints, [16.0, 26.0])
+
+
+def test_control_plane_matches_oracle():
+    """Per-rack setpoints + diurnal ambient + the setpoint controller +
+    throttling, all armed at once: the jitted engine must match the numpy
+    oracle event-for-event (latencies) and in every thermal integral,
+    with the controller landing both implementations on the SAME final
+    setpoints."""
+    tcfg = ThermalConfig(**HOT, t_setpoint=(16.0, 26.0),
+                         ambient_swing=3.0, ambient_period=40.0,
+                         ctrl_period=0.5, ctrl_target=55.0, ctrl_band=2.0,
+                         ctrl_step=1.0, ctrl_min=14.0, ctrl_max=27.0,
+                         t_throttle=58.0, t_release=52.0,
+                         throttle_freq=0.5, throttle_power_scale=0.6,
+                         carbon_period=60.0, price_period=60.0)
+    cfg = SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
+                    sched_policy=SchedPolicy.LOAD_BALANCE,
+                    sleep_policy=SleepPolicy.SINGLE_TIMER,
+                    sleep_state=SrvState.S3, max_events=80_000,
+                    thermal=tcfg)
+    arr, specs = _workload(n_jobs=150, lam=40.0, mean=0.04)
+    res, orc = _run_both(cfg, arr, specs, tau=0.05)
+    assert res.n_finished == len(arr) == len(orc.job_finish)
+    np.testing.assert_allclose(np.sort(res.latencies),
+                               np.sort(orc.latencies()),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(res.temps, orc.temp, rtol=2e-3, atol=5e-2)
+    np.testing.assert_array_equal(res.setpoints, orc.t_set)
+    assert res.cooling_energy == pytest.approx(orc.cool_energy, rel=2e-3)
+    assert res.carbon_g == pytest.approx(orc.carbon_g, rel=2e-3)
+    assert res.energy_cost == pytest.approx(orc.cost, rel=2e-3)
+    assert res.throttle_seconds == pytest.approx(
+        orc.throttle_seconds.sum(), rel=5e-3, abs=1e-3)
+    # the controller actually acted (setpoints moved off their initials)
+    assert not np.array_equal(res.setpoints, [16.0, 26.0])
+
+
+def test_setpoint_controller_cools_hot_rack_relaxes_cold():
+    """A loaded rack above ctrl_target steps its setpoint DOWN (colder
+    supply); an idle rack below target - band steps UP toward ctrl_max
+    (cheaper cooling), both clipped into [ctrl_min, ctrl_max]."""
+    # idle fixed point = setpoint + 67·0.5 ≈ setpoint + 33.5, busy ≈
+    # setpoint + 39: a 58 °C target with a 2 °C band sits between them,
+    # so the busy rack must cool its supply and the idle rack relax it
+    tcfg = ThermalConfig(enabled=True, r_th=0.5, tau_th=0.2, recirc=0.0,
+                         rack_size=1, t_setpoint=22.0,
+                         ctrl_period=0.5, ctrl_target=58.0, ctrl_band=2.0,
+                         ctrl_step=1.0, ctrl_min=12.0, ctrl_max=26.0)
+    cfg = SimConfig(n_servers=2, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=10_000,
+                    thermal=tcfg)
+    # server 0 busy at ~+39 °C over supply, server 1 idle at ~+33.5 °C
+    res = farm_mod.simulate(cfg, np.asarray([0.0]), [dag_single(6.0)])
+    busy = int(np.argmax(res.peak_temps))
+    assert res.setpoints[busy] < 22.0
+    assert res.setpoints[1 - busy] > 22.0
+    assert (res.setpoints >= tcfg.ctrl_min).all()
+    assert (res.setpoints <= tcfg.ctrl_max).all()
+
+
+def test_carbon_aware_deferral_matches_oracle():
+    """CARBON_AWARE on a diurnal carbon curve: deferrable jobs arriving
+    in the high-intensity half are parked and released at the solved
+    down-crossing; engine and oracle agree on who deferred, for how long,
+    and on every latency."""
+    tcfg = ThermalConfig(**HOT, carbon_base=300.0, carbon_swing=0.6,
+                         carbon_period=120.0, defer_threshold=320.0)
+    cfg = SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
+                    sched_policy=SchedPolicy.CARBON_AWARE,
+                    sleep_policy=SleepPolicy.SINGLE_TIMER,
+                    sleep_state=SrvState.PKG_C6, max_events=60_000,
+                    thermal=tcfg)
+    rng = np.random.default_rng(7)
+    n = 150
+    arr = workload.wiki_like_trace(n, 4.0, period=120.0, swing=0.5, seed=3)
+    specs = [dag_single(rng.exponential(0.05), deferrable=(j % 2 == 0),
+                        defer_slack=60.0) for j in range(n)]
+    res, orc = _run_both(cfg, arr, specs, tau=0.5)
+    assert res.n_finished == n == len(orc.job_finish)
+    assert res.deferred_jobs == orc.defer_count > 0
+    assert res.deferred_seconds == pytest.approx(orc.defer_seconds,
+                                                 rel=1e-4)
+    assert res.carbon_g_avoided_est == pytest.approx(orc.grams_avoided,
+                                                     rel=1e-3)
+    assert res.carbon_g_avoided_est > 0.0
+    np.testing.assert_allclose(np.sort(res.latencies),
+                               np.sort(orc.latencies()),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(res.temps, orc.temp, rtol=2e-3, atol=5e-2)
+
+
+def test_deferral_deadline_forces_admission():
+    """Threshold below the sinusoid trough: the signal NEVER crosses
+    down, so a deferrable job with a finite deadline is admitted exactly
+    when the deadline expires (latency = slack + service on an idle
+    farm), and one with no deadline admits immediately (no release
+    candidate => deferral must not deadlock)."""
+    tcfg = ThermalConfig(**HOT, carbon_base=300.0, carbon_swing=0.2,
+                         carbon_period=600.0,
+                         defer_threshold=100.0)     # < 300·(1−0.2)
+    cfg = SimConfig(n_servers=2, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sched_policy=SchedPolicy.CARBON_AWARE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=5_000,
+                    thermal=tcfg)
+    slack, svc = 3.0, 0.25
+    res = farm_mod.simulate(
+        cfg, np.asarray([0.0, 0.0]),
+        [dag_single(svc, deferrable=True, defer_slack=slack),
+         dag_single(svc, deferrable=True)])         # no deadline
+    assert res.n_finished == 2
+    assert res.deferred_jobs == 1
+    lat = np.sort(res.latencies)
+    assert lat[0] == pytest.approx(svc, rel=1e-4)          # admitted now
+    assert lat[1] == pytest.approx(slack + svc, rel=1e-4)  # at deadline
+    orc = OracleSim(cfg, np.asarray([0.0, 0.0]),
+                    [dag_single(svc, deferrable=True, defer_slack=slack),
+                     dag_single(svc, deferrable=True)]).run()
+    np.testing.assert_allclose(lat, np.sort(orc.latencies()),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_release_train_precedes_coincident_arrival():
+    """More deferred jobs due at one instant than arrivals_per_step, with
+    a fresh arrival landing at exactly that instant: the engine must
+    admit EVERY release chunk before the arrival (the oracle's event
+    order) instead of interleaving the arrival between chunks against a
+    partial load snapshot."""
+    tcfg = ThermalConfig(**HOT, carbon_base=300.0, carbon_swing=0.2,
+                         carbon_period=600.0,
+                         defer_threshold=100.0)     # always above: deadline
+    cfg = SimConfig(n_servers=2, n_cores=1, max_jobs=32, tasks_per_job=1,
+                    sched_policy=SchedPolicy.CARBON_AWARE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=10_000,
+                    thermal=tcfg)
+    slack = 3.0
+    n_def = cfg.arrivals_per_step + 3       # 11 due at t=slack, 2 chunks
+    arr = np.concatenate([np.zeros(n_def), [slack]])
+    specs = [dag_single(0.5, deferrable=True, defer_slack=slack)
+             for _ in range(n_def)] + [dag_single(0.5)]
+    res, orc = _run_both(cfg, arr, specs)
+    assert res.n_finished == n_def + 1 == len(orc.job_finish)
+    assert res.deferred_jobs == orc.defer_count == n_def
+    np.testing.assert_allclose(np.sort(res.latencies),
+                               np.sort(orc.latencies()),
+                               rtol=1e-4, atol=1e-4)
+    # the coincident arrival queues BEHIND the full release train
+    assert res.latencies[-1] == pytest.approx(orc.latencies()[-1],
+                                              rel=1e-4)
+
+
+def test_deferred_dag_job_stays_parked_until_release():
+    """Multi-task (DAG) deferral regression: a parked 2-chain job's
+    zero-dep root must NOT be promoted by another job's DAG-edge
+    resolution (arr_ptr has moved past the parked job, but it is not
+    admitted) — it stays BLOCKED until its release, places on a real
+    server, and counts in the deferral telemetry; the release must also
+    never double-run rows.  Matches the oracle event-for-event."""
+    from repro.core.jobs import dag_chain
+
+    tcfg = ThermalConfig(**HOT, carbon_base=300.0, carbon_swing=0.2,
+                         carbon_period=600.0,
+                         defer_threshold=100.0)     # always above: deadline
+    cfg = SimConfig(n_servers=3, n_cores=1, max_jobs=16, tasks_per_job=2,
+                    max_children=2,
+                    sched_policy=SchedPolicy.CARBON_AWARE,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=10_000,
+                    thermal=tcfg)
+    slack = 5.0
+    chain = lambda: dag_chain([0.4, 0.4])
+    parked = chain()
+    parked.deferrable, parked.defer_slack = True, slack
+    arr = np.asarray([0.0, 0.1])
+    specs = [chain(), parked]     # job 0 undeferrable: its edge resolves
+    res = farm_mod.simulate(cfg, arr, specs)   # at t=0.4, while 1 parks
+    assert res.n_finished == 2
+    assert res.deferred_jobs == 1
+    lat = res.latencies
+    # the deferred chain waited for its deadline, then ran both tasks
+    assert lat[1] == pytest.approx((0.1 + slack) + 0.8 - 0.1, rel=1e-4)
+    assert lat[0] == pytest.approx(0.8, rel=1e-4)
+    orc = OracleSim(cfg, arr, specs).run()
+    assert orc.defer_count == 1
+    np.testing.assert_allclose(np.sort(lat), np.sort(orc.latencies()),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_control_plane_k_sweep_bit_identical():
+    """Acceptance: per-rack setpoints + controller + diurnal ambient +
+    CARBON_AWARE deferral + throttling produce IDENTICAL final states for
+    every events_per_step (the macro-step gating stays conservative under
+    every new event source)."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.core import engine
+    from repro.core.jobs import build_jobs
+
+    tcfg = ThermalConfig(**HOT, t_setpoint=(16.0, 24.0),
+                         ambient_swing=3.0, ambient_period=40.0,
+                         ctrl_period=0.5, ctrl_target=55.0,
+                         t_throttle=58.0, t_release=52.0,
+                         throttle_freq=0.5, throttle_power_scale=0.6,
+                         carbon_base=300.0, carbon_swing=0.6,
+                         carbon_period=60.0, defer_threshold=330.0)
+    cfg0 = SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
+                     sched_policy=SchedPolicy.CARBON_AWARE,
+                     sleep_policy=SleepPolicy.SINGLE_TIMER,
+                     sleep_state=SrvState.PKG_C6, max_events=80_000,
+                     thermal=tcfg)
+    rng = np.random.default_rng(7)
+    n = 120
+    arr = workload.wiki_like_trace(n, 4.0, period=60.0, swing=0.5, seed=3)
+    specs = [dag_single(rng.exponential(0.05), deferrable=(j % 2 == 0),
+                        defer_slack=30.0) for j in range(n)]
+    outs = {}
+    for k in (1, 8):
+        cfg = dc.replace(cfg0, events_per_step=k)
+        jt = build_jobs(cfg, arr, specs)
+        state, tc = engine.init_state(cfg, jt)
+        state = dc.replace(state, farm=dc.replace(
+            state.farm, srv_tau=jnp_full(cfg, 0.5)))
+        outs[k] = engine.run(state, cfg, tc)
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(outs[1]),
+            jax.tree_util.tree_leaves_with_path(outs[8])):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"K=8 vs K=1: leaf {jax.tree_util.keystr(kp)}")
+    assert int(outs[1].thermal.defer_count) > 0
+
+
+def jnp_full(cfg, v):
+    import jax.numpy as jnp
+    return jnp.full((cfg.n_servers,), v, cfg.time_dtype)
+
+
 def test_replica_sweep_carries_thermal_stats():
     tcfg = ThermalConfig(**HOT, t_throttle=50.0, t_release=45.0)
     cfg = SimConfig(n_servers=4, n_cores=2, max_jobs=64, tasks_per_job=1,

@@ -55,6 +55,71 @@ def test_wiki_like_trace_rate_and_monotone():
     assert peak > 1.2 * trough
 
 
+def _scalar_wiki(n_jobs, mean_rate, period, swing, seed):
+    """Independent one-candidate-at-a-time reimplementation of the
+    vectorized wiki_like_trace draw discipline (dedicated gap/acceptance
+    streams, u·lam_max < rate(t) predicate, sequential time accumulation
+    — np.cumsum accumulates in the same order)."""
+    gap_rng, acc_rng = [np.random.default_rng(s)
+                        for s in np.random.SeedSequence(seed).spawn(2)]
+    lam_max = mean_rate * (1.0 + swing)
+    out, t = [], 0.0
+    while len(out) < n_jobs:
+        t += gap_rng.exponential(1.0 / lam_max)
+        u = acc_rng.random()
+        if u * lam_max < mean_rate * (1.0 + swing
+                                      * np.sin(2.0 * np.pi * t / period)):
+            out.append(t)
+    return np.asarray(out)
+
+
+def _scalar_mmpp2(lam_h, lam_l, r_hl, r_lh, n_jobs, seed):
+    """Independent scalar reimplementation of the vectorized MMPP(2)
+    discipline: the modulating trajectory comes lazily from its own
+    stream (standard exponentials scaled per state), candidates from the
+    gap stream, acceptance from the uniform stream."""
+    state_rng, gap_rng, acc_rng = [
+        np.random.default_rng(s)
+        for s in np.random.SeedSequence(seed).spawn(3)]
+    start_h = bool(state_rng.random() < r_lh / (r_lh + r_hl))
+    lam_max = max(lam_h, lam_l)
+    switch, sw_end, k = [], 0.0, 0
+    out, t = [], 0.0
+    while len(out) < n_jobs:
+        t += gap_rng.exponential(1.0 / lam_max)
+        u = acc_rng.random()
+        while sw_end < t:
+            in_h = (k % 2 == 0) == start_h
+            sw_end += state_rng.exponential(1.0) \
+                * (1.0 / r_hl if in_h else 1.0 / r_lh)
+            switch.append(sw_end)
+            k += 1
+        idx = np.searchsorted(switch, t, side="right")
+        lam = lam_h if ((idx % 2 == 0) == start_h) else lam_l
+        if u * lam_max < lam:
+            out.append(t)
+    return np.asarray(out)
+
+
+def test_wiki_vectorized_matches_scalar_reference():
+    """Regression (PR 5 vectorization): the chunked thinning sampler is
+    bit-equal to the scalar one-draw-at-a-time reference for a fixed
+    seed, at any chunk size."""
+    args = dict(n_jobs=3000, mean_rate=80.0, period=20.0, swing=0.6)
+    ref = _scalar_wiki(seed=11, **args)
+    for chunk in (1, 257, 16384):
+        vec = workload.wiki_like_trace(seed=11, chunk=chunk, **args)
+        np.testing.assert_array_equal(vec, ref)
+
+
+def test_mmpp2_vectorized_matches_scalar_reference():
+    ref = _scalar_mmpp2(500.0, 40.0, 1.5, 0.7, 3000, seed=13)
+    for chunk in (1, 257, 16384):
+        vec = workload.mmpp2_arrivals(500.0, 40.0, 1.5, 0.7, 3000,
+                                      seed=13, chunk=chunk)
+        np.testing.assert_array_equal(vec, ref)
+
+
 def test_trace_arrivals_sorted_truncated_rescaled():
     raw = [3.0, 1.0, 2.0, 8.0]
     ts = workload.trace_arrivals(raw, n_jobs=3, rate_scale=2.0)
