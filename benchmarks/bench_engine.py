@@ -26,7 +26,8 @@ from repro.core import engine, farm as farm_mod, montecarlo, topology, \
     workload
 from repro.core.jobs import dag_chain, dag_single
 from repro.core.types import (SchedPolicy, SimConfig, SleepPolicy,
-                              SrvState, TelemetryConfig, ThermalConfig)
+                              SrvState, TelemetryConfig, ThermalConfig,
+                              TraceConfig)
 
 # events/s of the acceptance configs at the seed engine (PR 1), measured
 # on the same container class that runs CI — the denominator of "speedup".
@@ -204,6 +205,26 @@ def telemetry_overhead(n_servers=512, n_jobs=600, repeats=2):
             "overhead_frac": eps["off"] / max(eps["on"], 1e-9) - 1.0}
 
 
+def trace_overhead(n_servers=512, n_jobs=600, repeats=2):
+    """Per-step cost of the flight recorder on the 512-server acceptance
+    farm: events/s with tracing off vs on (default 65536-slot ring),
+    timing ``engine.run`` only.  Budget: <15% — emission is a few masked
+    scatter slices per applied event, each cond-gated behind mask.any().
+    Keyed ``events_per_s`` (the traced number) so check_regression guards
+    it like every other perf case."""
+    def cfg(mode):
+        return SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
+                         max_jobs=max(n_jobs, 16), tasks_per_job=1,
+                         sleep_policy=SleepPolicy.ALWAYS_ON,
+                         max_events=20_000,
+                         trace=TraceConfig(enabled=mode))
+    eps = _interleaved_engine_eps({"off": cfg(False), "on": cfg(True)},
+                                  n_jobs=n_jobs, rounds=2 * repeats + 8)
+    return {"events_per_s": eps["on"],
+            "events_per_s_off": eps["off"],
+            "overhead_frac": eps["off"] / max(eps["on"], 1e-9) - 1.0}
+
+
 def thermal_overhead(n_servers=512, n_jobs=600, repeats=2):
     """Cost of the thermal subsystem in the jitted loop: events/s with
     thermal off vs tracking-only (RC temps + carbon/cost) vs fully
@@ -271,6 +292,14 @@ def run(verbose=True, sizes=(64, 512, 4096, 20480), smoke=False):
             row(f"bench_engine_n{n}", 1e6 / eps,
                 f"events/s={eps:.0f} finished={res.n_finished}")
     out["perf"] = perf_cases(repeats=1 if smoke else 2, verbose=verbose)
+    tro = trace_overhead(repeats=1 if smoke else 2)
+    out["perf"]["trace_overhead"] = tro      # under the --check guard
+    if verbose:
+        row("bench_engine_trace",
+            1e6 / max(tro["events_per_s"], 1e-9),
+            f"off={tro['events_per_s_off']:.0f}ev/s "
+            f"on={tro['events_per_s']:.0f}ev/s "
+            f"overhead={tro['overhead_frac']:.1%}")
     therm = thermal_overhead(repeats=1 if smoke else 2)
     out["thermal"] = therm
     if verbose:

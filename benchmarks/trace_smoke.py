@@ -1,0 +1,120 @@
+"""CI smoke for the flight recorder's export path.
+
+Runs the 512-server acceptance farm with tracing (and telemetry, so the
+counter tracks exercise too) enabled, exports the ring as a Chrome-trace
+JSON (the Perfetto artifact CI uploads), and validates the document
+against the Chrome trace event format schema: every entry must carry a
+phase, duration/instant/counter events must carry name + ts, and the
+task duration events must cover every finished task.  Exits nonzero on
+any violation so a silently-broken export fails the build rather than
+shipping an unloadable artifact.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.trace_smoke [--out trace.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from repro.core import engine, traceio, workload
+from repro.core.jobs import build_jobs
+from repro.core.types import (SimConfig, SleepPolicy, TelemetryConfig,
+                              TraceConfig, TraceKind)
+from benchmarks.bench_engine import dag_single
+
+REQUIRED_PHASES = {"X": ("name", "ts", "dur", "pid", "tid"),
+                   "i": ("name", "ts", "pid", "tid"),
+                   "C": ("name", "ts", "args"),
+                   "M": ("name", "args")}
+
+
+def build_trace(n_servers=512, n_jobs=600, seed=0):
+    cfg = SimConfig(n_servers=n_servers, n_cores=4, local_q=64,
+                    max_jobs=max(n_jobs, 16), tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=20_000,
+                    trace=TraceConfig(enabled=True),
+                    telemetry=TelemetryConfig(enabled=True))
+    rng = np.random.default_rng(seed)
+    specs = [dag_single(rng.exponential(0.01)) for _ in range(n_jobs)]
+    lam = workload.utilization_to_rate(0.5, 0.01, n_servers, cfg.n_cores)
+    arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
+    jt = build_jobs(cfg, np.asarray(arr), specs)
+    state, tc = engine.init_state(cfg, jt)
+    final = engine.run(state, cfg, tc)
+    return cfg, final
+
+
+def validate(doc, path) -> list:
+    """Schema violations in an exported Chrome-trace document (JSON
+    object format: {"traceEvents": [...]})."""
+    errors = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return [f"{path}: document is not a JSON object with traceEvents"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return [f"{path}: traceEvents is not a non-empty array"]
+    n_by_phase = {}
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph is None:
+            errors.append(f"entry {i}: missing 'ph'")
+            continue
+        n_by_phase[ph] = n_by_phase.get(ph, 0) + 1
+        for field in REQUIRED_PHASES.get(ph, ()):
+            if field not in e:
+                errors.append(f"entry {i} (ph={ph}): missing '{field}'")
+        if ph == "X" and e.get("dur", 0) < 0:
+            errors.append(f"entry {i}: negative duration {e['dur']}")
+    # 'i' events only exist when the ring holds instant kinds (sleeps,
+    # drops, thermal crossings, flows) — not in every config
+    for ph in ("M", "X"):
+        if n_by_phase.get(ph, 0) == 0:
+            errors.append(f"no '{ph}' events in document")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="trace_smoke.json",
+                    help="exported Chrome-trace path")
+    ap.add_argument("--servers", type=int, default=512)
+    ap.add_argument("--jobs", type=int, default=600)
+    args = ap.parse_args(argv)
+
+    cfg, final = build_trace(args.servers, args.jobs)
+    ev, n_drop = traceio.decode(final.trace, cfg)
+    if len(ev) == 0:
+        print("trace_smoke: FAIL — empty ring after a 600-job run")
+        return 1
+    traceio.save_chrome_trace(args.out, ev, cfg, state=final,
+                              n_dropped=n_drop)
+    with open(args.out) as f:           # validate what actually landed
+        doc = json.load(f)
+    errors = validate(doc, args.out)
+
+    n_task = sum(1 for e in doc.get("traceEvents", [])
+                 if e.get("ph") == "X" and e.get("cat") != "flow")
+    n_fin = int((ev["kind"] == TraceKind.FINISH).sum())
+    if n_task < n_fin:
+        errors.append(f"{n_task} task duration events < "
+                      f"{n_fin} FINISH records in the ring")
+
+    if errors:
+        print(f"trace_smoke: FAIL — {len(errors)} schema violation(s)")
+        for msg in errors[:20]:
+            print(f"  - {msg}")
+        return 1
+    print(f"trace_smoke: OK — {len(doc['traceEvents'])} entries "
+          f"({n_task} task spans, {len(ev)} ring records, "
+          f"{n_drop} dropped) -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

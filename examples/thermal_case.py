@@ -29,10 +29,11 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import farm, workload
+from repro.core import farm, traceio, workload
 from repro.core.jobs import dag_single
 from repro.core.types import (SchedPolicy, SimConfig, SleepPolicy,
-                              SrvState, TelemetryConfig, ThermalConfig)
+                              SrvState, TelemetryConfig, ThermalConfig,
+                              TraceConfig)
 
 N_JOBS = 2000
 PERIOD = 120.0          # compressed "day" so the diurnal curves matter
@@ -61,9 +62,11 @@ specs = [dag_single(rng.exponential(0.35)) for _ in range(N_JOBS)]
 scenarios = {
     "baseline": cfg0,
     "throttled": dataclasses.replace(cfg0, thermal=thermal_guard),
+    # flight recorder on for the winning scenario: the exported Perfetto
+    # timeline shows placements avoiding the hot racks
     "thermal-aware": dataclasses.replace(
         cfg0, sched_policy=SchedPolicy.THERMAL_AWARE,
-        thermal=thermal_guard),
+        thermal=thermal_guard, trace=TraceConfig(enabled=True)),
 }
 
 print(f"{'scenario':>14} {'peakT':>7} {'meanT':>7} {'thr(s)':>8} "
@@ -82,6 +85,14 @@ for name, cfg in scenarios.items():
 assert results["throttled"].peak_temp < results["baseline"].peak_temp
 assert results["thermal-aware"].throttle_seconds \
     < results["throttled"].throttle_seconds
+
+res_ta = results["thermal-aware"]
+traceio.save_chrome_trace("thermal_case_trace.json", res_ta.trace_events,
+                          scenarios["thermal-aware"],
+                          n_dropped=res_ta.trace_dropped)
+print(f"\n[trace] {len(res_ta.trace_events)} events "
+      f"({res_ta.trace_dropped} dropped) -> thermal_case_trace.json "
+      f"(load in ui.perfetto.dev)")
 
 ts = results["thermal-aware"].telemetry
 occ = ts.occupancy > 0

@@ -57,10 +57,11 @@ import jax.numpy as jnp
 from . import network as net_mod
 from . import power, scheduler, server, telemetry
 from . import thermal as thermal_mod
+from . import trace as trace_mod
 from .types import (INF, FlowTable, JobTable, NetState, SchedPolicy,
-                    SchedState, ServerFarm, SimConfig, SimState, SrvState,
-                    TaskStatus, init_farm, init_flows, init_net, init_sched,
-                    replace)
+                    SchedState, ServerFarm, SimConfig, SimState,
+                    SleepPolicy, SrvState, TaskStatus, TraceKind,
+                    init_farm, init_flows, init_net, init_sched, replace)
 
 
 # ==========================================================================
@@ -185,7 +186,13 @@ def _advance_interval(state: SimState, cfg: SimConfig, tc, t_next):
         wvals = telemetry.window_values(state, cfg, dt, p_busy, onehot,
                                         thermal_ctx)
         widx = telemetry.window_index(state.t, dt, cfg.telemetry)
-        telem = replace(telem, win=telem.win.at[widx].add(wvals))
+        # intervals past the window horizon still clamp into the last
+        # window (conservation: columns keep integrating to the run
+        # totals) but the clamped seconds are counted so summarize can
+        # flag/NaN the contaminated last-window time-averages
+        spill = telemetry.window_spill(state.t, dt, cfg.telemetry)
+        telem = replace(telem, win=telem.win.at[widx].add(wvals),
+                        win_overflow=telem.win_overflow + spill)
 
     if cfg.use_kernel:
         if cfg.time_dtype != jnp.float32:
@@ -276,7 +283,8 @@ def _apply_wakeups(farm: ServerFarm, cfg, now):
         srv_idle_since=jnp.where(done, now, farm.srv_idle_since))
 
 
-def _apply_completions(state: SimState, cfg: SimConfig, tc=None):
+def _apply_completions(state: SimState, cfg: SimConfig, tc=None,
+                       recs=None):
     """Handle all tasks whose task_end <= now.  Marks tasks DONE, updates
     job bookkeeping, and resolves DAG edges (immediate dep decrement or
     flow spawn).
@@ -304,15 +312,27 @@ def _apply_completions(state: SimState, cfg: SimConfig, tc=None):
     finish = jnp.where(done_task, now, jobs.finish)
     jobs = replace(jobs, status=status, finish=finish)
     tasks_done, job_finish = _rebuild_job_completion(jobs, cfg, now)
+
+    if cfg.trace.enabled:
+        JT = jobs.status.shape[0]
+        trace_mod.stage(
+            recs, done_task, TraceKind.FINISH, jobs.server,
+            jnp.arange(JT, dtype=jnp.int32), now - jobs.start_at)
+        new_jf = (jobs.job_finish >= INF / 2) & (job_finish < INF / 2)
+        J = job_finish.shape[0]
+        trace_mod.stage(
+            recs, new_jf, TraceKind.JOB_FINISH, -1,
+            jnp.arange(J, dtype=jnp.int32), job_finish - jobs.arrival)
     jobs = replace(jobs, tasks_done=tasks_done, job_finish=job_finish)
 
     if T > 1:
         jobs, flows, net = _resolve_done_edges(
-            jobs, flows, net, cfg, tc, done_task, now)
+            jobs, flows, net, cfg, tc, done_task, now, recs)
     return replace(state, farm=farm, jobs=jobs, flows=flows, net=net)
 
 
-def _resolve_done_edges(jobs, flows, net, cfg, tc, done_task, now):
+def _resolve_done_edges(jobs, flows, net, cfg, tc, done_task, now,
+                        recs=None):
     """DAG edges of tasks completed this step: immediate dep decrement or
     flow spawn, then BLOCKED -> READY.  Works on the COMPLETING tasks'
     rows only: at most N·C tasks can finish simultaneously (each RUNNING
@@ -325,9 +345,16 @@ def _resolve_done_edges(jobs, flows, net, cfg, tc, done_task, now):
     task finished."""
     JT = jobs.status.shape[0]
     Kd = min(JT, cfg.n_servers * cfg.n_cores)
+    D = jobs.children.shape[1]
+    # flow-spawn records leave the cond as data (mask + payload lanes);
+    # the identity branch hands back all-false/zero lanes
+    spawn0 = (jnp.zeros((Kd * D,), bool),
+              jnp.full((Kd * D,), -1, jnp.int32),
+              jnp.full((Kd * D,), -1, jnp.int32),
+              jnp.zeros((Kd * D,), jobs.edge_bytes.dtype))
 
     def resolve(args):
-        jobs, flows, net = args
+        jobs, flows, net, _ = args
         if Kd < JT:
             tid_b, valid_b, _ = server.compact_mask(done_task, Kd)
             tq = jnp.clip(tid_b, 0)
@@ -396,20 +423,27 @@ def _resolve_done_edges(jobs, flows, net, cfg, tc, done_task, now):
             # the spawn primitives count the drop in flows.flows_dropped
             dep_count = dep_count.at[jnp.where(failed, f_child, JT)].add(
                 -1, mode="drop")
+            spawned = (flat & ~failed, f_src, f_child, f_bytes)
         else:
             dep_count = dep_count.at[jnp.clip(ch, 0).reshape(-1)].add(
                 -ch_valid.reshape(-1).astype(jnp.int32), mode="drop")
+            spawned = spawn0
 
         status = _promote_ready(jobs, dep_count, cfg)
         jobs = replace(jobs, status=status, dep_count=dep_count,
                        edge_sent=edge_sent)
-        return jobs, flows, net
+        return jobs, flows, net, spawned
 
-    return jax.lax.cond(done_task.any(), resolve, lambda a: a,
-                        (jobs, flows, net))
+    jobs, flows, net, spawned = jax.lax.cond(
+        done_task.any(), resolve, lambda a: a, (jobs, flows, net, spawn0))
+    if cfg.trace.enabled and cfg.has_network:
+        sm, s_src, s_child, s_bytes = spawned
+        trace_mod.stage(recs, sm, TraceKind.FLOW_SPAWN, s_src, s_child,
+                        s_bytes)
+    return jobs, flows, net
 
 
-def _apply_flow_completions(state: SimState, cfg: SimConfig):
+def _apply_flow_completions(state: SimState, cfg: SimConfig, recs=None):
     flows, fin = net_mod.complete_flows(state.flows, state.t)
 
     def resolve(jobs):
@@ -420,10 +454,16 @@ def _apply_flow_completions(state: SimState, cfg: SimConfig):
         return replace(jobs, dep_count=dep_count, status=status)
 
     jobs = jax.lax.cond(fin.any(), resolve, lambda j: j, state.jobs)
+    if cfg.trace.enabled:
+        # complete_flows keeps dst/child on deactivated rows, so the
+        # delivered edge is still addressable here
+        trace_mod.stage(recs, fin, TraceKind.FLOW_FINISH, flows.dst,
+                        flows.child)
     return replace(state, flows=flows, jobs=jobs)
 
 
-def _apply_arrival(state: SimState, cfg: SimConfig, tc=None, hold=None):
+def _apply_arrival(state: SimState, cfg: SimConfig, tc=None, hold=None,
+                   recs=None):
     """Admit up to cfg.arrivals_per_step jobs whose arrival <= t in one
     pass: assign servers to all their tasks (policy), mark roots READY.
 
@@ -559,15 +599,35 @@ def _apply_arrival(state: SimState, cfg: SimConfig, tc=None, hold=None):
         status = jobs.status.at[sc].set(
             jnp.where(root, TaskStatus.READY, jobs.status[gather]),
             mode="drop")
-        jobs = replace(jobs, status=status, arr_ptr=j0 + n_adm)
-        return jobs, farm, sched
+        return replace(jobs, status=status, arr_ptr=j0 + n_adm), farm, \
+            sched
 
     jobs, farm, sched = jax.lax.cond(
         n_adm > 0, admit, lambda a: a, (jobs, farm, sched))
+    if cfg.trace.enabled:
+        # ARRIVAL for every job whose arrival slot was consumed this
+        # chunk (deferred ones included), ADMIT only for placed jobs
+        # (server = the job's first task's pick, aux = its queue depth).
+        # Staged OUTSIDE the admit cond: admission wrote everything the
+        # records need (deferral is visible as a finite admit_at, the
+        # pick as the first task's server; q_len doesn't change until
+        # the READY drain), and a skipped cond means elig is all-false.
+        JT = jobs.status.shape[0]
+        trace_mod.stage(recs, elig, TraceKind.ARRIVAL, -1,
+                        jid.astype(jnp.int32))
+        adm = elig
+        if _deferral_on(cfg):
+            adm = elig & ~(jobs.admit_at[jnp.clip(jid, 0, J - 1)]
+                           < INF / 2)
+        first = jnp.clip(j0 * T + jnp.arange(K) * T, 0, JT - 1)
+        job_srv = jobs.server[first]
+        trace_mod.stage(recs, adm, TraceKind.ADMIT, job_srv,
+                        jid.astype(jnp.int32),
+                        farm.q_len[jnp.clip(job_srv, 0)])
     return replace(state, jobs=jobs, farm=farm, sched=sched)
 
 
-def _apply_releases(state: SimState, cfg: SimConfig, tc=None):
+def _apply_releases(state: SimState, cfg: SimConfig, tc=None, recs=None):
     """Admit deferred jobs whose release time has come (CARBON_AWARE
     only): up to cfg.arrivals_per_step per step in ascending job id, one
     shared scheduler snapshot per step — mirroring batched arrival
@@ -585,9 +645,14 @@ def _apply_releases(state: SimState, cfg: SimConfig, tc=None):
     jobs = state.jobs
     now = state.t
     due = (jobs.admit_at < INF / 2) & (jobs.admit_at <= now)
+    K0 = cfg.arrivals_per_step
+    # released-job records leave the cond as data; the identity branch
+    # hands back an all-invalid chunk
+    rel0 = (jnp.zeros((K0,), bool), jnp.full((K0,), -1, jnp.int32),
+            jnp.zeros((K0,), jnp.float32), jnp.zeros((K0,), jnp.int32))
 
     def release(args):
-        jobs, therm = args
+        jobs, therm, _ = args
         farm, sched = state.farm, state.sched
         J = jobs.arrival.shape[0]
         T = cfg.tasks_per_job
@@ -644,14 +709,21 @@ def _apply_releases(state: SimState, cfg: SimConfig, tc=None):
             defer_count=therm.defer_count
             + jvalid.sum().astype(jnp.int32),
             grams_avoided=therm.grams_avoided + avoided.sum())
-        return jobs, therm
 
-    jobs, therm = jax.lax.cond(due.any(), release, lambda a: a,
-                               (jobs, state.thermal))
+        return jobs, therm, (jvalid, jid_b, waited, jnp.stack(picks))
+
+    jobs, therm, rel = jax.lax.cond(due.any(), release, lambda a: a,
+                                    (jobs, state.thermal, rel0))
+    if cfg.trace.enabled:
+        jvalid, jid_b, waited, picks_j = rel
+        trace_mod.stage(recs, jvalid, TraceKind.RELEASE, -1, jid_b,
+                        waited)
+        trace_mod.stage(recs, jvalid, TraceKind.ADMIT, picks_j, jid_b,
+                        state.farm.q_len[jnp.clip(picks_j, 0)])
     return replace(state, jobs=jobs, thermal=therm)
 
 
-def _resolve_drops(state: SimState, cfg: SimConfig, dropped):
+def _resolve_drops(state: SimState, cfg: SimConfig, dropped, recs=None):
     """Complete the bookkeeping for tasks dropped by a full queue
     (dropped (JT,) bool, already marked DONE by the drain).
 
@@ -684,27 +756,41 @@ def _resolve_drops(state: SimState, cfg: SimConfig, dropped):
                        dep_count=dep_count, edge_sent=edge_sent)
 
     jobs = jax.lax.cond(dropped.any(), resolve, lambda j: j, state.jobs)
+    if cfg.trace.enabled:
+        # staged outside the cond: the drop mask and the job table's
+        # before/after finish stamps carry everything the records need
+        JT = jobs.status.shape[0]
+        trace_mod.stage(recs, dropped, TraceKind.DROP, jobs.server,
+                        jnp.arange(JT, dtype=jnp.int32))
+        new_jf = (state.jobs.job_finish >= INF / 2) \
+            & (jobs.job_finish < INF / 2)
+        J = jobs.job_finish.shape[0]
+        trace_mod.stage(recs, new_jf, TraceKind.JOB_FINISH, -1,
+                        jnp.arange(J, dtype=jnp.int32),
+                        jobs.job_finish - jobs.arrival)
     return replace(state, jobs=jobs)
 
 
-def _drain_ready(state: SimState, cfg: SimConfig):
+def _drain_ready(state: SimState, cfg: SimConfig, recs=None):
     """Enqueue up to cfg.ready_per_step READY tasks at their servers
     (first K in task-id order).  Queue-full drops are resolved afterwards
     (_resolve_drops); their newly-READY children drain on the next step —
     still at the same simulation time, since READY tasks pin t_next to t."""
     if cfg.use_vectorized_hot_loop:
-        return _drain_ready_batched(state, cfg)
-    return _drain_ready_scalar(state, cfg)
+        return _drain_ready_batched(state, cfg, recs)
+    return _drain_ready_scalar(state, cfg, recs)
 
 
-def _drain_ready_batched(state: SimState, cfg: SimConfig):
+def _drain_ready_batched(state: SimState, cfg: SimConfig, recs=None):
     """One multi-push: the first K READY tasks become QUEUED with FIFO
     stamps written elementwise into their own task rows (no ring-slot
     scatter).  The whole pass is gated on "any READY task" so quiet steps
     stay free."""
     is_ready = state.jobs.status == TaskStatus.READY
+    JT0 = state.jobs.status.shape[0]
 
-    def drain(state):
+    def drain(args):
+        state, _ = args
         jobs, farm = state.jobs, state.farm
         K = cfg.ready_per_step
         JT = jobs.status.shape[0]
@@ -730,12 +816,17 @@ def _drain_ready_batched(state: SimState, cfg: SimConfig):
                                             enqueue_seq=enq), farm=farm)
         dropped = jnp.zeros((JT,), bool).at[
             jnp.where(valid & ~ok, tids, JT)].set(True, mode="drop")
-        return _resolve_drops(state, cfg, dropped)
+        return state, dropped
 
-    return jax.lax.cond(is_ready.any(), drain, lambda s: s, state)
+    # drop resolution happens outside the drain cond so its trace
+    # records can be staged (it re-gates itself on dropped.any())
+    state, dropped = jax.lax.cond(
+        is_ready.any(), drain, lambda a: a,
+        (state, jnp.zeros((JT0,), bool)))
+    return _resolve_drops(state, cfg, dropped, recs)
 
 
-def _drain_ready_scalar(state: SimState, cfg: SimConfig):
+def _drain_ready_scalar(state: SimState, cfg: SimConfig, recs=None):
     """Seed reference path: K sequential scalar queue_push + begin_wake."""
     status_before = state.jobs.status
 
@@ -763,29 +854,53 @@ def _drain_ready_scalar(state: SimState, cfg: SimConfig):
     # READY -> DONE transitions during the loop are exactly the drops
     dropped = (status_before == TaskStatus.READY) \
         & (state.jobs.status == TaskStatus.DONE)
-    return _resolve_drops(state, cfg, dropped)
+    return _resolve_drops(state, cfg, dropped, recs)
 
 
-def _start_tasks(state: SimState, cfg: SimConfig):
+def _start_tasks(state: SimState, cfg: SimConfig, recs=None):
     # throttled servers start work at their reduced effective frequency;
     # freq=None keeps the untrottled scalar expression when thermal is off
     freq = thermal_mod.effective_freq(state.thermal, cfg) \
         if cfg.thermal.throttling else None
     farm, jobs = server.try_start(state.farm, cfg, state.jobs, state.t,
                                   freq)
+    if cfg.trace.enabled:
+        started = (jobs.status == TaskStatus.RUNNING) \
+            & (state.jobs.status == TaskStatus.QUEUED)
+        JT = jobs.status.shape[0]
+        trace_mod.stage(recs, started, TraceKind.START, jobs.server,
+                        jnp.arange(JT, dtype=jnp.int32),
+                        jobs.task_end - state.t)
     return replace(state, farm=farm, jobs=jobs)
 
 
-def _apply_events(state: SimState, cfg: SimConfig, tc, cheap: bool):
+def _apply_events(state: SimState, cfg: SimConfig, tc, cheap: bool,
+                  recs=None):
     """The event-application pipeline at the (already advanced) time
     state.t.  ``cheap`` statically trims the passes the macro-step gating
     guarantees are not needed: flow completions (gated: t < min done_at)
     and the rate recompute (the active-flow set cannot change during a
-    cheap event — no spawns, no completions — so rates stay valid)."""
+    cheap event — no spawns, no completions — so rates stay valid).
+
+    ``recs`` collects the pass's flight-recorder records (trace.stage);
+    the caller flushes them to the ring in one write after the pipeline.
+    """
+    # ALWAYS_ON has no srv_state transition path (timer_transitions is
+    # the identity, wasp_adjust is WASP-only), so the WAKEUP/SLEEP masks
+    # are identically false — skip both sites statically and keep ~1/4
+    # of the flush lane space out of the hot loop
+    trace_sleep = (cfg.trace.enabled
+                   and cfg.sleep_policy != SleepPolicy.ALWAYS_ON)
+    if trace_sleep:
+        N = cfg.n_servers
+        woke = (state.farm.srv_state == SrvState.WAKING) \
+            & (state.farm.srv_wake_at <= state.t)
+        trace_mod.stage(recs, woke, TraceKind.WAKEUP,
+                        jnp.arange(N, dtype=jnp.int32))
     state = replace(state, farm=_apply_wakeups(state.farm, cfg, state.t))
-    state = _apply_completions(state, cfg, tc)
+    state = _apply_completions(state, cfg, tc, recs)
     if cfg.has_network and not cheap:
-        state = _apply_flow_completions(state, cfg)
+        state = _apply_flow_completions(state, cfg, recs)
     hold = None
     if _deferral_on(cfg):
         # deferred releases admit BEFORE fresh arrivals (lower job ids
@@ -795,12 +910,14 @@ def _apply_events(state: SimState, cfg: SimConfig, tc, cheap: bool):
         # fully admitted AND drained (the oracle's event order)
         admit_at = state.jobs.admit_at
         hold = ((admit_at < INF / 2) & (admit_at <= state.t)).any()
-        state = _apply_releases(state, cfg, tc)
-    state = _apply_arrival(state, cfg, tc, hold)
-    state = _drain_ready(state, cfg)
-    state = _start_tasks(state, cfg)
+        state = _apply_releases(state, cfg, tc, recs)
+    state = _apply_arrival(state, cfg, tc, hold, recs)
+    state = _drain_ready(state, cfg, recs)
+    state = _start_tasks(state, cfg, recs)
 
     # refresh ACTIVE/IDLE, run local power controllers + pool managers
+    if trace_sleep:
+        st_before = state.farm.srv_state
     farm = server.refresh_idle_state(state.farm, cfg, state.t)
     active = _active_jobs(state.jobs)
     farm, sched = scheduler.provisioning_adjust(farm, cfg, state.sched,
@@ -809,6 +926,16 @@ def _apply_events(state: SimState, cfg: SimConfig, tc, cheap: bool):
                                  state.t)
     farm = scheduler.timer_transitions(farm, cfg, state.t)
     state = replace(state, farm=farm, sched=sched)
+    if trace_sleep:
+        # awake -> sleep edges from the local power controllers
+        was_awake = (st_before == SrvState.ACTIVE) \
+            | (st_before == SrvState.IDLE)
+        asleep = (farm.srv_state == SrvState.PKG_C6) \
+            | (farm.srv_state == SrvState.S3) \
+            | (farm.srv_state == SrvState.OFF)
+        trace_mod.stage(recs, was_awake & asleep, TraceKind.SLEEP,
+                        jnp.arange(cfg.n_servers, dtype=jnp.int32), -1,
+                        farm.srv_state)
 
     if cfg.has_network:
         if cheap:
@@ -881,17 +1008,42 @@ def _cheap_gate(state: SimState, cfg: SimConfig):
     return ok, t_next
 
 
-def _consume_cheap(state: SimState, cfg: SimConfig, tc, t_next):
-    state = _advance_interval(state, cfg, tc, t_next)
+def _apply_thermal_events(state: SimState, cfg: SimConfig,
+                          recs=None) -> SimState:
+    """Throttle hysteresis latch + setpoint-controller tick, shared by the
+    cheap core and the full step (both run right after the interval
+    advance), with their flight-recorder emission."""
     if cfg.thermal.throttling:
         # hysteresis latch + in-flight stretch; cond-gated on "any flip"
+        old_thr = state.thermal.throttled
         farm, jobs, therm = thermal_mod.apply_throttle(
             state.farm, state.jobs, state.thermal, cfg, state.t)
         state = replace(state, farm=farm, jobs=jobs, thermal=therm)
+        if cfg.trace.enabled:
+            trace_mod.stage(recs, therm.throttled != old_thr,
+                            TraceKind.THROTTLE_CROSSING,
+                            jnp.arange(cfg.n_servers, dtype=jnp.int32),
+                            -1, therm.t_srv)
     if cfg.thermal.has_ctrl:
+        if cfg.trace.enabled:
+            # the tick fires exactly when time reaches ctrl_next (it is a
+            # next-event candidate); stage before the controller advances
+            trace_mod.stage1(recs, state.t >= state.thermal.ctrl_next,
+                             TraceKind.CTRL_TICK)
+        # per-rack setpoint controller tick (cond-gated on the period)
         state = replace(state, thermal=thermal_mod.apply_setpoint_ctrl(
             state.thermal, cfg, state.t))
-    state = _apply_events(state, cfg, tc, cheap=True)
+    return state
+
+
+def _consume_cheap(state: SimState, cfg: SimConfig, tc, t_next):
+    state = _advance_interval(state, cfg, tc, t_next)
+    recs = [] if cfg.trace.enabled else None
+    state = _apply_thermal_events(state, cfg, recs)
+    state = _apply_events(state, cfg, tc, cheap=True, recs=recs)
+    if cfg.trace.enabled:
+        state = replace(state, trace=trace_mod.flush(
+            state.trace, cfg, state.t, recs))
     return replace(state, events=state.events + 1)
 
 
@@ -924,18 +1076,12 @@ def _full_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     # energy over an unbounded interval
     t_next = jnp.where(t_next >= INF / 2, state.t, t_next)
     state = _advance_interval(state, cfg, tc, t_next)
-
-    if cfg.thermal.throttling:
-        # hysteresis latch + in-flight stretch; cond-gated on "any flip"
-        farm, jobs, therm = thermal_mod.apply_throttle(
-            state.farm, state.jobs, state.thermal, cfg, state.t)
-        state = replace(state, farm=farm, jobs=jobs, thermal=therm)
-    if cfg.thermal.has_ctrl:
-        # per-rack setpoint controller tick (cond-gated on the period)
-        state = replace(state, thermal=thermal_mod.apply_setpoint_ctrl(
-            state.thermal, cfg, state.t))
-
-    state = _apply_events(state, cfg, tc, cheap=False)
+    recs = [] if cfg.trace.enabled else None
+    state = _apply_thermal_events(state, cfg, recs)
+    state = _apply_events(state, cfg, tc, cheap=False, recs=recs)
+    if cfg.trace.enabled:
+        state = replace(state, trace=trace_mod.flush(
+            state.trace, cfg, state.t, recs))
 
     all_done = (~state.jobs.valid
                 | (state.jobs.status == TaskStatus.DONE)).all() \
@@ -958,6 +1104,7 @@ def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     if cfg.events_per_step > 1:
         state = _macro_chew(state, cfg, tc)
     state = _full_step(state, cfg, tc)
+    state = replace(state, steps=state.steps + 1)
 
     if telemetry_on:
         state = replace(state, telem=telemetry.accumulate_finishes(
@@ -1003,7 +1150,9 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
         sched=init_sched(cfg),
         telem=telemetry.init_telemetry(cfg),
         thermal=thermal_mod.init_thermal(cfg, racks),
+        trace=trace_mod.init_trace(cfg),
         events=jnp.zeros((), jnp.int32),
+        steps=jnp.zeros((), jnp.int32),
         done=jnp.zeros((), bool),
     )
     return state, tc

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -9,7 +10,36 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import engine, jobs as jobs_mod, telemetry as telemetry_mod
+from . import traceio
 from .types import INF, SimConfig, SimState
+
+
+@dataclasses.dataclass
+class RunInfo:
+    """Run provenance: host wall clock + the exact config that produced
+    the result, for BENCH/CI artifacts and trace headers."""
+    wall_s: float                   # wall time of the timed engine run
+    steps: int                      # while-loop iterations (macro-steps)
+    events: int                     # events retired
+    events_per_s: float             # events / wall_s
+    backend: str                    # jax.default_backend()
+    config: dict                    # recursive SimConfig dump
+    jit_compile_s: float = float("nan")  # only with simulate(profile=True)
+
+
+def _config_dict(obj):
+    """Recursive dataclass -> plain-JSON dump (dtypes etc. stringified)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _config_dict(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [_config_dict(v) for v in obj]
+    if isinstance(obj, (bool, int, float, str)) or obj is None:
+        return obj
+    try:
+        return np.dtype(obj).name
+    except TypeError:
+        return str(obj)
 
 
 @dataclasses.dataclass
@@ -51,6 +81,10 @@ class SimResult:
     deferred_jobs: int = 0          # jobs released after a deferral
     deferred_seconds: float = 0.0   # summed deferral wait
     carbon_g_avoided_est: float = 0.0  # first-order grams-avoided estimate
+    # flight recorder (None when cfg.trace.enabled=False)
+    trace_events: Optional[np.ndarray] = None  # EVENT_DTYPE, chronological
+    trace_dropped: int = 0          # records evicted by ring wrap-around
+    run_info: Optional[RunInfo] = None
 
     @property
     def mean_power(self) -> float:
@@ -90,6 +124,10 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
             deferred_seconds=float(th.defer_seconds),
             carbon_g_avoided_est=float(th.grams_avoided),
         )
+    trace_kw = {}
+    if cfg.trace.enabled:
+        ev, n_drop = traceio.decode(state.trace, cfg)
+        trace_kw = dict(trace_events=ev, trace_dropped=n_drop)
     return SimResult(
         sim_time=t,
         events=int(state.events),
@@ -113,17 +151,20 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
                    if cfg.telemetry.enabled else None),
         flows_dropped=int(state.flows.flows_dropped),
         **thermal_kw,
+        **trace_kw,
     )
 
 
 def simulate(cfg: SimConfig, arrivals, specs, topo=None, tau=None,
-             pools=None, racks=None) -> SimResult:
+             pools=None, racks=None, profile: bool = False) -> SimResult:
     """Build the job table, run the engine to completion, summarize.
 
     tau   — scalar or (N,) delay-timer values (seconds; INF = never sleep)
     pools — (N,) 0/1 pool assignment (dual-timer low/high, WASP active/sleep)
     racks — (N,) rack ids for the thermal recirculation grouping (defaults
             to the topology's top-of-rack grouping, else i // rack_size)
+    profile — rerun the (now warm) engine once more to split JIT compile
+            time out of the wall clock (result.run_info.jit_compile_s)
     """
     jt = jobs_mod.build_jobs(cfg, np.asarray(arrivals), specs)
     state, tc = engine.init_state(cfg, jt, topo, racks)
@@ -137,5 +178,21 @@ def simulate(cfg: SimConfig, arrivals, specs, topo=None, tau=None,
             state, farm=dataclasses.replace(
                 state.farm,
                 srv_pool=jnp.asarray(pools, jnp.int32)))
-    final = engine.run(state, cfg, tc)
-    return summarize(final, cfg)
+    t0 = time.perf_counter()
+    final = jax.block_until_ready(engine.run(state, cfg, tc))
+    wall = time.perf_counter() - t0
+    compile_s = float("nan")
+    if profile:
+        t1 = time.perf_counter()
+        final = jax.block_until_ready(engine.run(state, cfg, tc))
+        warm = time.perf_counter() - t1
+        compile_s = max(wall - warm, 0.0)
+        wall = warm
+    res = summarize(final, cfg)
+    n_ev = int(final.events)
+    res.run_info = RunInfo(
+        wall_s=wall, steps=int(final.steps), events=n_ev,
+        events_per_s=n_ev / max(wall, 1e-12),
+        backend=jax.default_backend(), config=_config_dict(cfg),
+        jit_compile_s=compile_s)
+    return res

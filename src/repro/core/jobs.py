@@ -137,6 +137,7 @@ def build_jobs(cfg: SimConfig, arrivals: np.ndarray,
         server=jnp.full((J * T,), -1, jnp.int32),
         enqueue_seq=jnp.zeros((J * T,), jnp.int32),
         task_end=jnp.full((J * T,), INF, cfg.time_dtype),
+        start_at=jnp.full((J * T,), INF, cfg.time_dtype),
         finish=jnp.full((J * T,), INF, cfg.time_dtype),
         job_finish=jnp.full((J,), INF, cfg.time_dtype),
         tasks_done=jnp.zeros((J,), jnp.int32),

@@ -105,6 +105,9 @@ def replica_stats(state_b, cfg: SimConfig):
         "finished": finished,
         "flows_dropped": np.asarray(state_b.flows.flows_dropped),
     }
+    if cfg.trace.enabled:
+        # per-replica flight-recorder health: records evicted by wrap
+        out["trace_dropped"] = np.asarray(state_b.trace.dropped)
     if cfg.thermal.enabled:
         th = state_b.thermal
         out.update({

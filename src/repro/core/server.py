@@ -202,7 +202,10 @@ def try_start(farm: ServerFarm, cfg: SimConfig, jobs: JobTable, now,
         end_t = (now + svc).astype(jobs.task_end.dtype)
         status = jnp.where(start_t, TaskStatus.RUNNING, jobs.status)
         task_end = jnp.where(start_t, end_t, jobs.task_end)
-        jobs = replace(jobs, status=status, task_end=task_end)
+        start_at = jnp.where(
+            start_t, jnp.asarray(now, jobs.start_at.dtype), jobs.start_at)
+        jobs = replace(jobs, status=status, task_end=task_end,
+                       start_at=start_at)
 
         # core side: the r-th starting task of server s takes the r-th
         # free core; build the (s, r) -> task table with one small

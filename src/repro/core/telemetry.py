@@ -80,6 +80,7 @@ def init_telemetry(cfg: SimConfig) -> Telemetry:
         sla_miss=jnp.zeros((), jnp.int32),
         sla_total=jnp.zeros((), jnp.int32),
         tail_viol=jnp.zeros((), jnp.int32),
+        win_overflow=jnp.zeros((), jnp.float32),
     )
 
 
@@ -170,6 +171,18 @@ def window_index(t, dt, tcfg: TelemetryConfig) -> jnp.ndarray:
     mid = t.astype(jnp.float32) + 0.5 * dt.astype(jnp.float32)
     return jnp.clip((mid / tcfg.window_dt).astype(jnp.int32),
                     0, tcfg.n_windows - 1)
+
+
+def window_spill(t, dt, tcfg: TelemetryConfig) -> jnp.ndarray:
+    """Seconds of this interval that window_index clamped into the last
+    window because its midpoint lies past the n_windows·window_dt horizon.
+    Conservation is deliberately preserved (the seconds still land in the
+    last window) — the accumulated spill lets summarize flag/NaN the
+    contaminated last-window time-averages instead of silently skewing
+    them on runs longer than the horizon."""
+    mid = t.astype(jnp.float32) + 0.5 * dt.astype(jnp.float32)
+    horizon = jnp.float32(tcfg.n_windows * tcfg.window_dt)
+    return jnp.where(mid >= horizon, dt.astype(jnp.float32), 0.0)
 
 
 def accumulate_finishes(telem: Telemetry, cfg: SimConfig, jobs,
@@ -346,6 +359,15 @@ class TelemetrySummary:
     price: np.ndarray = None            # (W,) $/kWh, time-averaged
     carbon_per_window: np.ndarray = None  # (W,) grams CO2 (raw integral)
     cost_per_window: np.ndarray = None    # (W,) $ (raw integral)
+    # seconds of sim time clamped into the last window because the run
+    # outlived the n_windows·window_dt horizon; > 0 means the last
+    # window's time-averaged series were NaN-ed out as contaminated
+    # (raw integrals — occupancy, residency, carbon/cost — are kept)
+    win_overflow: float = 0.0
+
+    @property
+    def last_window_contaminated(self) -> bool:
+        return self.win_overflow > 0.0
 
     @property
     def sla_miss_rate(self) -> float:
@@ -367,6 +389,13 @@ def summarize(state, cfg: SimConfig) -> TelemetrySummary:
     occ = win[:, WIN_OCC]
     norm = np.where(occ > 0, occ, np.nan)
     used = int((occ > 0).sum())
+    overflow = float(telem.win_overflow)
+    if overflow > 0.0:
+        # the run outlived the window horizon: the last window absorbed
+        # the clamped tail, so its time-averages mix in-horizon and
+        # post-horizon state — NaN them out rather than report a skewed
+        # value (the raw integral columns are left intact)
+        norm[-1] = np.nan
     energy = float(np.asarray(state.farm.energy).sum()
                    + np.asarray(state.net.sw_energy).sum())
     mean_lat = float(hist_mean(jh, lo, hi))
@@ -401,4 +430,5 @@ def summarize(state, cfg: SimConfig) -> TelemetrySummary:
         price=win[:, WIN_PRICE] / norm,
         carbon_per_window=win[:, WIN_CARBON_G],
         cost_per_window=win[:, WIN_COST],
+        win_overflow=overflow,
     )

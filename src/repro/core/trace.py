@@ -1,0 +1,272 @@
+"""Device-side event flight recorder.
+
+A fixed-capacity ring buffer living in ``SimState.trace``, appended to
+from inside the jitted event loop — both the cheap macro-step core and
+the full step — so the recorded stream is identical for every
+``events_per_step``.  Each record is (kind, time, server, tid, aux);
+see ``types.TraceKind`` for the kind vocabulary and per-kind payloads.
+
+Emission is two-phase to keep the hot loop fast.  XLA CPU scatter costs
+~60ns per update ROW regardless of the target size, so per-site masked
+scatters (13 sites x 5 field arrays, mostly-empty entity-wide masks)
+dominate the step.  Instead every site :func:`stage`\\ s its records —
+a Python-level list of (mask, kind, payload) tuples, zero device work —
+and the step :func:`flush`\\ es once per event pass:
+
+  1. concatenate the staged masks into one (L,) lane vector and pack it
+     into int32 words (fusable elementwise work),
+  2. locate the first W set lanes with popcount/cumsum/searchsorted
+     plus a (W, 32) bit-rank matrix — no sort, no L-row scatter,
+  3. map each lane back to its staged segment (static boundaries) and
+     gather the payload for just those W rows, then write them with ONE
+     W-row scatter into the packed (cap, 5) ring.
+
+Payloads are never concatenated into L-wide columns — materializing an
+(L, 5) update matrix costs ~12ns per lane per pass, several times the
+whole budget at L ≈ 4000.  All O(L) work is the 1-bit mask pipeline.
+
+A pass emitting more than W records (mass sleep/drop storms) falls back
+to the exact L-row scatter under a ``lax.cond`` — correctness never
+depends on W.  Every site is guarded by a Python-level
+``if cfg.trace.enabled:`` so a disabled recorder is statically absent
+from the traced computation (bit-identical dynamics, zero per-step
+cost).
+
+The write pointer is monotonic: slot = ptr % capacity, and records
+overwritten by wrap-around are counted in ``TraceState.dropped`` so a
+truncated recording is loud rather than silently partial.  Host-side
+decoding/export lives in ``core/traceio.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .types import SimConfig, TraceState
+
+__all__ = ["init_trace", "stage", "stage1", "flush"]
+
+# batch width: records written per ring scatter.  Small on purpose —
+# scatter cost is ~60ns/row and the (W, 32) rank matrix scales with W,
+# while a typical event pass retires only a handful of records; bursts
+# just take more loop iterations and stay exact.
+_W = 16
+
+
+def _buf_dtype(cfg: SimConfig):
+    return jnp.promote_types(cfg.time_dtype, jnp.float32)
+
+
+def init_trace(cfg: SimConfig) -> TraceState:
+    """Fresh ring buffer; (1, 5) placeholder when disabled."""
+    cap = cfg.trace.capacity if cfg.trace.enabled else 1
+    return TraceState(
+        buf=jnp.full((cap, 5), -1.0, _buf_dtype(cfg)),
+        ptr=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+    )
+
+
+def stage(records: list, mask, kind: int, server=None, tid=None,
+          aux=None) -> None:
+    """Queue one record per set bit of ``mask`` (shape (M,)) for the
+    pass's flush.  ``server``/``tid``/``aux`` may be (M,) arrays or
+    scalars (broadcast at flush time).  Pure Python bookkeeping — no
+    device ops until :func:`flush`.
+
+    Records land in the ring in stage-call order, ascending lane within
+    each call — the same deterministic order the per-site scatters
+    produced, which the oracle mirrors.  ``kind`` must be a static int.
+    """
+    records.append((jnp.asarray(mask), int(kind), server, tid, aux))
+
+
+def stage1(records: list, pred, kind: int, server=-1, tid=-1,
+           aux=0.0) -> None:
+    """Queue a single record when the scalar ``pred`` holds."""
+    stage(records, jnp.asarray(pred).reshape((1,)), kind,
+          jnp.asarray(server).reshape((1,)),
+          jnp.asarray(tid).reshape((1,)),
+          jnp.asarray(aux).reshape((1,)))
+
+
+def _columns(records, cfg: SimConfig, t):
+    """Staged records -> (mask (L,), update matrix (L, 5)) in lane
+    order.  Kind is a compile-time constant column; time is the shared
+    scalar ``t`` (every record in a pass carries the pass's event
+    time).  Only used on the small-L direct path — the batched path
+    assembles W rows lazily with :func:`_lane_rows`."""
+    dt = _buf_dtype(cfg)
+    masks, kinds, srvs, tids, auxs = [], [], [], [], []
+    for mask, kind, server, tid, aux in records:
+        m = mask.shape[0]
+        masks.append(mask)
+        kinds.append(jnp.full((m,), kind, dt))
+        srvs.append(jnp.broadcast_to(
+            jnp.asarray(-1 if server is None else server, dt), (m,)))
+        tids.append(jnp.broadcast_to(
+            jnp.asarray(-1 if tid is None else tid, dt), (m,)))
+        auxs.append(jnp.broadcast_to(
+            jnp.asarray(0.0 if aux is None else aux, dt), (m,)))
+    mask = jnp.concatenate(masks)
+    upd = jnp.stack(
+        [jnp.concatenate(kinds),
+         jnp.broadcast_to(t.astype(dt), mask.shape),
+         jnp.concatenate(srvs), jnp.concatenate(tids),
+         jnp.concatenate(auxs)], axis=1)
+    return mask, upd
+
+
+def _lane_field(records, field, seg, lane, starts, dt, default):
+    """One payload column for W extracted lanes: per-segment gather (W
+    elements each) merged by segment id — O(W * segments) instead of
+    materializing an L-wide concatenated column.  Trace-time constants
+    get special cases: a scalar equal to the column default needs no
+    select at all, and an ``arange`` payload (the ubiquitous
+    entity-index column) is just ``lane - start`` — elementwise, no
+    gather."""
+    import numpy as np
+
+    out = jnp.full(lane.shape, default, dt)
+    arange_segs = []
+    for s, (rec, st) in enumerate(zip(records, starts)):
+        p = rec[field]
+        if p is None:
+            continue
+        try:                      # concrete (trace-time constant) payload?
+            p_np = np.asarray(p)
+        except Exception:         # tracer — runtime value
+            p_np = None
+        p = jnp.asarray(p)
+        if p.ndim == 0:
+            if p_np is not None and float(p_np) == default:
+                continue
+            out = jnp.where(seg == s, p.astype(dt), out)
+        elif p_np is not None and np.array_equal(
+                p_np, np.arange(p_np.shape[0])):
+            arange_segs.append(s)             # folded into one select
+        else:
+            local = jnp.clip(lane - st, 0, p.shape[0] - 1)
+            out = jnp.where(seg == s, p[local].astype(dt), out)
+    if arange_segs:
+        # entity-index columns (the dominant payload) all read
+        # lane - segment_start: one select over an is-arange table
+        # instead of a where per segment
+        is_ar = np.zeros((len(records),), bool)
+        is_ar[arange_segs] = True
+        out = jnp.where(jnp.asarray(is_ar)[seg],
+                        (lane - starts[seg]).astype(dt), out)
+    return out
+
+
+def _lane_rows(records, cfg: SimConfig, t, lane, starts, kinds_arr):
+    """(W, 5) update rows for the extracted lanes."""
+    dt = _buf_dtype(cfg)
+    seg = jnp.searchsorted(starts, lane, side="right").astype(
+        jnp.int32) - 1
+    return jnp.stack(
+        [kinds_arr[seg],
+         jnp.broadcast_to(t.astype(dt), lane.shape),
+         _lane_field(records, 2, seg, lane, starts, dt, -1.0),
+         _lane_field(records, 3, seg, lane, starts, dt, -1.0),
+         _lane_field(records, 4, seg, lane, starts, dt, 0.0)], axis=1)
+
+
+def flush(tr: TraceState, cfg: SimConfig, t, records: list) -> TraceState:
+    """Write one event pass's staged records to the ring.  Callers must
+    hold ``cfg.trace.enabled`` true — emission sites are statically
+    gated, so this function never sees a placeholder ring.
+
+    The write loops over W-record batches: zero iterations on a quiet
+    pass, one for any normal pass (a pass rarely retires more than a
+    couple of records), more only for mass bursts (sleep/drop storms) —
+    so bursts stay exact without an L-row scatter on the common path.
+    A ``lax.cond`` fallback would be wrong here even though bursts are
+    rare: XLA CPU inserts a defensive copy of the ring around the
+    conditional (~the whole flush budget per pass), while the
+    while_loop carry aliases in place."""
+    if not records:
+        return tr
+    cap = cfg.trace.capacity
+    sizes = [r[0].shape[0] for r in records]
+    L = sum(sizes)
+
+    if L <= _W:
+        # narrow lane space: one L-row scatter, no rank search.  k-th
+        # set bit -> slot (ptr + k) % cap; unset lanes scatter to the
+        # out-of-bounds sentinel `cap` and are dropped.
+        mask, upd = _columns(records, cfg, t)
+        n = mask.sum().astype(jnp.int32)
+        new_ptr = tr.ptr + n
+        over = (jnp.maximum(new_ptr - cap, 0)
+                - jnp.maximum(tr.ptr - cap, 0))
+        idx = tr.ptr + jnp.cumsum(mask.astype(jnp.int32)) - 1
+        slot = jnp.where(mask, idx % cap, cap)
+        buf = tr.buf.at[slot].set(upd, mode="drop")
+        return TraceState(buf=buf, ptr=new_ptr, dropped=tr.dropped + over)
+
+    # pack the mask into words once; each batch locates its W lanes by
+    # rank arithmetic (popcount cumsum + searchsorted + a (W, 32) bit
+    # matrix) — a sort or an L-row scatter would cost more than the
+    # whole flush budget, this is all fusable elementwise work.  The
+    # pad to a word multiple rides along in the concat (a dynamic
+    # update slice into a zeroed (B*32,) buffer would copy the whole
+    # lane vector again), and n comes from the popcount cumsum rather
+    # than a second L-wide reduction.
+    dt = _buf_dtype(cfg)
+    off0 = 0
+    starts_py = []
+    for sz in sizes:
+        starts_py.append(off0)
+        off0 += sz
+    starts = jnp.asarray(starts_py, jnp.int32)
+    kinds_arr = jnp.asarray([r[1] for r in records], dt)
+    B = -(-L // 32)
+    if all(sz % 8 == 0 for sz in sizes):
+        # byte-aligned segments: pack each next to its producer (the
+        # packbits fuses with the mask's comparison chain) and
+        # concatenate 1/8th of the data instead of the bool lane vector
+        packed = jnp.concatenate(
+            [jnp.packbits(r[0], bitorder="little") for r in records]
+            + ([jnp.zeros((B * 4 - L // 8,), jnp.uint8)]
+               if B * 4 > L // 8 else []))
+    else:
+        segs = [r[0] for r in records]
+        if B * 32 > L:
+            segs.append(jnp.zeros((B * 32 - L,), bool))
+        packed = jnp.packbits(jnp.concatenate(segs), bitorder="little")
+    words = lax.bitcast_convert_type(
+        packed.reshape(B, 4), jnp.uint32).reshape(B)
+    pc = lax.population_count(words).astype(jnp.int32)
+    cum = jnp.cumsum(pc)                                    # inclusive
+    n = cum[-1]
+    new_ptr = tr.ptr + n
+    over = jnp.maximum(new_ptr - cap, 0) - jnp.maximum(tr.ptr - cap, 0)
+    k = jnp.arange(_W, dtype=jnp.int32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+
+    def write_batch(carry):
+        buf, off = carry
+        rank = off + k                              # global record ranks
+        # word containing each rank: first word whose cumulative
+        # popcount exceeds it
+        wsel = jnp.searchsorted(cum, rank, side="right").astype(jnp.int32)
+        wq = jnp.clip(wsel, 0, B - 1)
+        word_k = words[wq]                                      # (W,)
+        j = rank - (cum[wq] - pc[wq])               # rank within word
+        wbits = ((word_k[:, None] >> shifts[None, :]) & 1).astype(
+            jnp.int32)                                       # (W, 32)
+        within = jnp.cumsum(wbits, axis=1)
+        bitpos = jnp.argmax((wbits == 1) & (within == j[:, None] + 1),
+                            axis=1).astype(jnp.int32)
+        lane = jnp.clip(wq * 32 + bitpos, 0, L - 1)
+        slot = jnp.where(rank < n, (tr.ptr + rank) % cap, cap)
+        buf = buf.at[slot].set(
+            _lane_rows(records, cfg, t, lane, starts, kinds_arr),
+            mode="drop")
+        return buf, off + _W
+
+    buf, _ = lax.while_loop(lambda c: c[1] < n, write_batch,
+                            (tr.buf, jnp.zeros((), jnp.int32)))
+    return TraceState(buf=buf, ptr=new_ptr, dropped=tr.dropped + over)

@@ -96,6 +96,36 @@ class SleepPolicy:
     WASP = 3               # shallow PkgC6 in active pool; PkgC6->S3 in sleep pool
 
 
+class TraceKind:
+    """Event kinds recorded by the device-side flight recorder
+    (core/trace.py).  Values are stable — they appear in exported traces
+    and in the oracle mirror (tests/oracle.py)."""
+
+    ARRIVAL = 0            # job's arrival processed (tid = job id)
+    ADMIT = 1              # job admitted/placed (tid = job id, server =
+                           # first task's server, aux = queue depth there)
+    RELEASE = 2            # carbon-deferred job released (aux = seconds held)
+    START = 3              # task started on a core (aux = stretched duration)
+    FINISH = 4             # task finished compute
+    JOB_FINISH = 5         # last task of a job done (tid = job id,
+                           # aux = job latency)
+    WAKEUP = 6             # server wake transition completed
+    SLEEP = 7              # server entered a sleep state (aux = SrvState)
+    DROP = 8               # task dropped on a full queue
+    FLOW_SPAWN = 9         # network flow spawned (server = src,
+                           # tid = child task, aux = bytes)
+    FLOW_FINISH = 10       # network flow delivered (server = dst,
+                           # tid = child task)
+    THROTTLE_CROSSING = 11  # thermal throttle engaged/released
+                            # (aux = temperature °C)
+    CTRL_TICK = 12         # CRAC setpoint controller tick
+    NUM = 13
+
+    NAMES = ("arrival", "admit", "release", "start", "finish", "job_finish",
+             "wakeup", "sleep", "drop", "flow_spawn", "flow_finish",
+             "throttle_crossing", "ctrl_tick")
+
+
 # --------------------------------------------------------------------------
 # pytree dataclass helper
 # --------------------------------------------------------------------------
@@ -320,6 +350,27 @@ class TelemetryConfig:
 
 
 @dataclass(frozen=True)
+class TraceConfig:
+    """Device-side event flight recorder (core/trace.py) knobs.
+
+    When enabled, every retired event appends fixed-width records to a
+    ring buffer living in ``SimState.trace`` — written from both the
+    cheap macro-step core and the full step, so the recorded stream is
+    identical for every ``events_per_step``.  When disabled the state
+    shrinks to (1,)-sized placeholders and the emission code is
+    statically absent from the trace (the thermal-off trick): dynamics
+    are bit-identical and the step costs nothing extra.
+    """
+
+    enabled: bool = False
+    # ring capacity in records (~17 bytes/record on device).  When the
+    # run emits more, the oldest records are overwritten and counted in
+    # TraceState.dropped — decode/export still see the most recent
+    # `capacity` events in order.
+    capacity: int = 65536
+
+
+@dataclass(frozen=True)
 class SimConfig:
     """Static shape/topology/policy configuration (hashable; jit-static)."""
 
@@ -379,6 +430,8 @@ class SimConfig:
     telemetry: TelemetryConfig = field(default_factory=TelemetryConfig)
     # thermal / cooling / carbon-cost subsystem
     thermal: ThermalConfig = field(default_factory=ThermalConfig)
+    # device-side event flight recorder
+    trace: TraceConfig = field(default_factory=TraceConfig)
     time_dtype: Any = jnp.float32
 
     @property
@@ -436,6 +489,10 @@ class JobTable:
     task_end: jnp.ndarray           # (J*T,) busy_until stamped at start (INF
                                     # otherwise) — lets completions resolve
                                     # elementwise in task space, no scatter
+    start_at: jnp.ndarray           # (J*T,) time the task began running (INF
+                                    # until started) — the lifecycle stamp
+                                    # between enqueue and finish, used by
+                                    # traceio span/critical-path decoding
     finish: jnp.ndarray             # (J*T,) task finish time
     job_finish: jnp.ndarray         # (J,) completion time (INF if not done)
     tasks_done: jnp.ndarray         # (J,) per-job finished-task count
@@ -499,6 +556,10 @@ class Telemetry:
     sla_miss: jnp.ndarray           # () jobs finishing past their sla
     sla_total: jnp.ndarray          # () finished jobs with a finite sla
     tail_viol: jnp.ndarray          # () jobs with latency > tail_thresh
+    win_overflow: jnp.ndarray       # () seconds of simulated time falling
+                                    # past the n_windows·window_dt horizon
+                                    # (clamped into the last window, whose
+                                    # time-averages are then contaminated)
 
 
 @pytree_dataclass
@@ -530,6 +591,26 @@ class ThermalState:
 
 
 @pytree_dataclass
+class TraceState:
+    """Device-side flight-recorder ring buffer (core/trace.py).  Sized
+    (1, 5) placeholder when tracing is disabled, like Telemetry.
+
+    Records are packed into ONE (cap, 5) float buffer — columns
+    [kind, time, server, tid, aux] — so the per-step flush is a single
+    row scatter (XLA CPU scatter costs ~60ns per update ROW, so op
+    count, not buffer size, is what the hot loop pays for).  The dtype
+    is ``cfg.time_dtype`` promoted to at least f32: integer columns
+    round-trip exactly below 2^24 (f32) / 2^53 (f64), far above any
+    realistic id space."""
+
+    buf: jnp.ndarray                # (cap, 5) [kind, time, server(-1 =
+                                    # farm-level), tid(-1 = n/a), aux]
+    ptr: jnp.ndarray                # () monotonic write pointer (total
+                                    # events ever emitted; slot = ptr % cap)
+    dropped: jnp.ndarray            # () records overwritten by wrap-around
+
+
+@pytree_dataclass
 class SimState:
     t: jnp.ndarray                  # () current simulation time
     farm: ServerFarm
@@ -539,7 +620,9 @@ class SimState:
     sched: SchedState
     telem: Telemetry
     thermal: ThermalState
+    trace: TraceState
     events: jnp.ndarray             # () processed event count
+    steps: jnp.ndarray              # () jitted sim_step invocations
     done: jnp.ndarray               # () bool — all jobs finished
 
 

@@ -53,7 +53,7 @@ import math
 import numpy as np
 
 from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
-                              SrvState)
+                              SrvState, TraceKind)
 from repro.core.thermal import TEMP_TOL, _CROSS_EPS
 
 
@@ -145,6 +145,10 @@ class OracleSim:
         self.job_finish = {}
         self.events = []
         self.dropped = 0
+        # flight-recorder mirror: (time, kind, server, tid, aux) tuples,
+        # semantically matching engine emission (traceio.as_events shape)
+        self.trace = []
+        self.start_t = {}
 
         # network (optional)
         self.topo = topo
@@ -224,6 +228,7 @@ class OracleSim:
         if not (self.thermal_on and tcfg.has_ctrl) \
                 or self.t < self.ctrl_next:
             return
+        self.trace.append((self.t, TraceKind.CTRL_TICK, -1, -1, 0.0))
         rack_max = np.full(self.t_set.shape[0], -INF)
         np.maximum.at(rack_max, self.rack, self.temp)
         down = rack_max > tcfg.ctrl_target
@@ -313,6 +318,8 @@ class OracleSim:
             elif was and self.temp[i] <= rel + TEMP_TOL:
                 s.throttled = False
             if s.throttled != was:
+                self.trace.append((self.t, TraceKind.THROTTLE_CROSSING,
+                                   i, -1, float(self.temp[i])))
                 # stretch in-flight work about *now* by the freq ratio
                 f_old = tcfg.throttle_freq if was else 1.0
                 f_new = tcfg.throttle_freq if s.throttled else 1.0
@@ -410,6 +417,10 @@ class OracleSim:
         load_snapshot = [s.load() for s in self.servers]
         roots = []
         for j in jobs:
+            if allow_defer:
+                # the arrival slot is consumed now (deferred jobs too);
+                # the release path re-admits without a second ARRIVAL
+                self.trace.append((self.t, TraceKind.ARRIVAL, -1, j, 0.0))
             if allow_defer and self._maybe_defer(j):
                 continue
             spec = self.specs[j]
@@ -442,6 +453,13 @@ class OracleSim:
                     self.cfg.sched_policy != SchedPolicy.ROUND_ROBIN:
                 # score policies colocate a job's tasks on one pick
                 load_snapshot[job_srv] += len(job_roots)
+            # ADMIT: the engine stamps the job's first task's pick and the
+            # queue depth there BEFORE the chunk's roots drain (queue
+            # pushes happen later, at READY drain)
+            srv0 = self.task_server[j * T]
+            self.trace.append(
+                (self.t, TraceKind.ADMIT, srv0, j,
+                 float(len(self.servers[srv0].queue))))
             roots += job_roots
         for tid in roots:
             self._enqueue(tid)
@@ -456,6 +474,9 @@ class OracleSim:
             dur = self.task_service[tid] / s.freq()
             s.cores[c] = tid
             s.core_end[c] = self.t + dur
+            self.start_t[tid] = self.t
+            self.trace.append((self.t, TraceKind.START, srv, tid,
+                               float(dur)))
             heapq.heappush(self.events,
                            (self.t + dur, 0, "complete", (srv, c)))
         s.state = SrvState.ACTIVE if s.busy() else SrvState.IDLE
@@ -467,10 +488,14 @@ class OracleSim:
         engine drains them on the following step at the same sim time)."""
         self.dropped += 1
         self.finish[tid] = self.t
+        self.trace.append((self.t, TraceKind.DROP,
+                           self.task_server[tid], tid, 0.0))
         j = tid // self.cfg.tasks_per_job
         self.remaining[j] -= 1
         if self.remaining[j] == 0 and j not in self.job_finish:
             self.job_finish[j] = self.t
+            self.trace.append((self.t, TraceKind.JOB_FINISH, -1, j,
+                               float(self.t - self.arrivals[j])))
         for ch in self.children[tid]:
             self.dep_count[ch] -= 1
             if self.dep_count[ch] == 0:
@@ -515,6 +540,8 @@ class OracleSim:
         fid = self.flow_seq
         self.flow_seq += 1
         self.flows[fid] = OracleFlow(src, dst, nbytes, ch, links)
+        self.trace.append((self.t, TraceKind.FLOW_SPAWN, src, ch,
+                           float(nbytes)))
 
     def _recompute_rates(self):
         if self.topo is None or not self.flows:
@@ -535,6 +562,7 @@ class OracleSim:
     def _complete_flow(self, fid):
         f = self.flows.pop(fid)
         ch = f.child
+        self.trace.append((self.t, TraceKind.FLOW_FINISH, f.dst, ch, 0.0))
         self.dep_count[ch] -= 1
         if self.dep_count[ch] == 0:
             self._enqueue(ch)
@@ -603,6 +631,9 @@ class OracleSim:
                 for c0 in range(0, len(batch), K):
                     chunk = batch[c0:c0 + K]
                     for j in chunk:
+                        self.trace.append(
+                            (self.t, TraceKind.RELEASE, -1, j,
+                             float(self.t - self.arrivals[j])))
                         self.defer_count += 1
                         self.defer_seconds += self.t - self.arrivals[j]
                         e_kwh = float(np.sum(self.specs[j].service)) \
@@ -638,10 +669,16 @@ class OracleSim:
                 s.cores[c] = None
                 s.core_end[c] = INF
                 self.finish[tid] = self.t
+                self.trace.append(
+                    (self.t, TraceKind.FINISH, srv, tid,
+                     float(self.t - self.start_t.get(tid, self.t))))
                 j = tid // T
                 self.remaining[j] -= 1
                 if self.remaining[j] == 0:
                     self.job_finish[j] = self.t
+                    self.trace.append(
+                        (self.t, TraceKind.JOB_FINISH, -1, j,
+                         float(self.t - self.arrivals[j])))
                 for ch in self.children[tid]:
                     nbytes = self.child_bytes[tid].get(ch, 0.0)
                     if self.topo is not None and nbytes > 0 \
@@ -664,6 +701,8 @@ class OracleSim:
                 srv = payload
                 s = self.servers[srv]
                 if s.state == SrvState.WAKING and s.wake_at <= self.t + 1e-12:
+                    self.trace.append(
+                        (self.t, TraceKind.WAKEUP, srv, -1, 0.0))
                     s.state = SrvState.IDLE
                     s.wake_at = INF
                     s.idle_since = self.t
@@ -677,6 +716,8 @@ class OracleSim:
                 if s.state == SrvState.IDLE and \
                         abs(s.idle_since - stamp) < 1e-12:
                     s.state = cfg.sleep_state
+                    self.trace.append((self.t, TraceKind.SLEEP, srv, -1,
+                                       float(cfg.sleep_state)))
 
             elif kind == "ready":
                 self._enqueue(payload)

@@ -16,9 +16,9 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import engine, farm as farm_mod, topology, workload
+from repro.core import engine, farm as farm_mod, topology, traceio, workload
 from repro.core.jobs import build_jobs, dag_chain, dag_single
-from repro.core.types import SchedPolicy, SimConfig, SleepPolicy
+from repro.core.types import SchedPolicy, SimConfig, SleepPolicy, TraceConfig
 
 from oracle import OracleSim
 
@@ -44,16 +44,26 @@ def _star_workload(n_jobs=30, seed=2):
 
 
 def test_fluid_flows_match_oracle_star():
-    """Ample slots: overlapping flows share links; latencies and flow
-    accounting must match the sequential fluid oracle."""
+    """Ample slots: overlapping flows share links; latencies, flow
+    accounting, AND the full event stream (flow spawns/finishes
+    included) must match the sequential fluid oracle."""
     n_jobs = 30
-    cfg = _star_cfg(max_flows=64, n_jobs=n_jobs)
+    cfg = dataclasses.replace(_star_cfg(max_flows=64, n_jobs=n_jobs),
+                              trace=TraceConfig(enabled=True))
     topo = topology.star(cfg.n_servers, link_cap=1.0e8)
     arr, specs = _star_workload(n_jobs)
     res = farm_mod.simulate(cfg, arr, specs, topo=topo)
     orc = OracleSim(cfg, arr, specs, topo=topo).run()
     assert res.n_finished == n_jobs == len(orc.job_finish)
     assert res.flows_dropped == orc.flows_dropped == 0
+    msg = traceio.diff_traces(res.trace_events,
+                              traceio.as_events(orc.trace),
+                              time_tol=1e-3)
+    assert msg is None, msg
+    from repro.core.types import TraceKind
+    kinds = set(res.trace_events["kind"].tolist())
+    assert TraceKind.FLOW_SPAWN in kinds
+    assert TraceKind.FLOW_FINISH in kinds
     np.testing.assert_allclose(np.sort(res.latencies),
                                np.sort(orc.latencies()),
                                rtol=1e-4, atol=1e-4)

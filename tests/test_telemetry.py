@@ -239,3 +239,33 @@ def test_summary_qos_and_ed_product():
     assert ts.energy_delay_product == pytest.approx(
         total_e * ts.mean_latency, rel=1e-6)
     assert ts.n_windows_used > 0
+
+
+def test_window_horizon_spillover_flagged():
+    """A run that outlives the n_windows·window_dt horizon clamps its
+    tail into the last window: win_overflow accrues the clamped seconds,
+    the last window's time-averaged series are NaN-ed as contaminated,
+    and the raw integrals still conserve total sim time.  (Regression:
+    previously the contamination was silent.)"""
+    tel = TelemetryConfig(n_bins=64, lat_lo=1e-4, lat_hi=10.0,
+                          n_windows=8, window_dt=0.05)   # 0.4 s horizon
+    cfg = SimConfig(n_servers=1, n_cores=1, max_jobs=8, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=2_000,
+                    telemetry=tel)
+    # 2x the horizon: last job arrives at 0.7 and runs 0.1 s
+    res = farm.simulate(cfg, np.asarray([0.0, 0.7]),
+                        [dag_single(0.1), dag_single(0.1)])
+    ts = res.telemetry
+    assert res.sim_time == pytest.approx(0.8, rel=1e-5)
+    assert ts.win_overflow > 0.0
+    assert ts.last_window_contaminated
+    assert np.isnan(ts.queue_depth[-1]) and np.isnan(ts.server_power[-1])
+    # only the LAST window was poisoned — earlier occupied windows stay
+    assert np.isfinite(ts.server_power[:-1]).any()
+    # conservation on the raw integrals is untouched by the NaN-ing
+    assert ts.occupancy.sum() == pytest.approx(res.sim_time, rel=1e-5)
+
+    # control: a run inside the horizon stays clean
+    short = farm.simulate(cfg, np.asarray([0.0]), [dag_single(0.1)])
+    assert short.telemetry.win_overflow == 0.0
+    assert not short.telemetry.last_window_contaminated

@@ -20,10 +20,12 @@ import numpy as np
 import pytest
 
 from repro.core import farm as farm_mod
-from repro.core import montecarlo, telemetry, thermal, topology, workload
+from repro.core import montecarlo, telemetry, thermal, topology, traceio, \
+    workload
 from repro.core.jobs import dag_single
 from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
-                              SrvState, TelemetryConfig, ThermalConfig)
+                              SrvState, TelemetryConfig, ThermalConfig,
+                              TraceConfig, TraceKind)
 
 from oracle import OracleSim
 
@@ -64,11 +66,21 @@ def test_thermal_matches_numpy_oracle(policy, tau, throttle):
     cfg = SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
                     sched_policy=SchedPolicy.LOAD_BALANCE,
                     sleep_policy=policy, sleep_state=SrvState.S3,
-                    max_events=60_000, thermal=tcfg)
+                    max_events=60_000, thermal=tcfg,
+                    trace=TraceConfig(enabled=True))
     arr, specs = _workload()
     res, orc = _run_both(cfg, arr, specs, tau=tau)
 
     assert res.n_finished == len(arr) == len(orc.job_finish)
+    # flight recorder: the full event stream agrees with the oracle's,
+    # including the solved throttle crossings
+    msg = traceio.diff_traces(res.trace_events,
+                              traceio.as_events(orc.trace),
+                              time_tol=5e-3)
+    assert msg is None, msg
+    if throttle:
+        kinds = set(res.trace_events["kind"].tolist())
+        assert TraceKind.THROTTLE_CROSSING in kinds
     np.testing.assert_allclose(np.sort(res.latencies),
                                np.sort(orc.latencies()),
                                rtol=1e-3, atol=1e-4)
@@ -501,6 +513,8 @@ def test_control_plane_k_sweep_bit_identical():
     for (kp, a), (_, b) in zip(
             jax.tree_util.tree_leaves_with_path(outs[1]),
             jax.tree_util.tree_leaves_with_path(outs[8])):
+        if jax.tree_util.keystr(kp) == ".steps":
+            continue      # macro-step count: K-dependent by definition
         np.testing.assert_array_equal(
             np.asarray(a), np.asarray(b),
             err_msg=f"K=8 vs K=1: leaf {jax.tree_util.keystr(kp)}")

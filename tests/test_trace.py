@@ -1,0 +1,280 @@
+"""Device-side flight recorder validation:
+
+  * the jitted ring buffer matches the heapq oracle's event stream
+    event-for-event (kind, time, server, tid) via traceio.diff_traces,
+    for events_per_step 1 and 8, with sleep timers + throttling armed
+  * the trace ring itself is macro-step invariant: K=1 and K=8 produce
+    leaf-EXACT final states INCLUDING the ring, under the full control
+    plane (setpoints + controller + ambient + deferral + throttling)
+  * tracing disabled is statically absent: every non-trace state leaf is
+    bit-identical to the enabled run, and the placeholder ring is (1,)
+  * wrap-around: a tiny capacity keeps the most recent records and
+    counts evictions exactly (ptr - capacity == oracle total - capacity)
+  * host-side consumers: lifecycle spans + critical-path decomposition
+    reconstruct per-job latency exactly; the Chrome-trace export is
+    valid JSON with metadata/duration/instant/counter records
+  * run provenance: simulate(profile=True) fills SimResult.run_info
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, farm as farm_mod, traceio, workload
+from repro.core.jobs import build_jobs, dag_chain, dag_single
+from repro.core.types import (SchedPolicy, SimConfig, SleepPolicy,
+                              SrvState, TelemetryConfig, ThermalConfig,
+                              TraceConfig, TraceKind)
+
+from oracle import OracleSim
+
+HOT = dict(enabled=True, r_th=0.5, tau_th=2.0, t_inlet=22.0, recirc=0.2,
+           rack_size=3)
+
+
+def _workload(n_jobs=150, lam=60.0, seed=3, svc_seed=7, mean=0.02):
+    rng = np.random.default_rng(svc_seed)
+    arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
+    specs = [dag_single(rng.exponential(mean)) for _ in range(n_jobs)]
+    return arr, specs
+
+
+def _rich_cfg(**kw):
+    """Sleep timers + thermal throttling: one run exercises arrival,
+    admit, start, finish, job_finish, wakeup, sleep, and
+    throttle_crossing records."""
+    tcfg = ThermalConfig(**HOT, t_throttle=50.0, t_release=45.0,
+                         throttle_freq=0.5, throttle_power_scale=0.6,
+                         carbon_period=600.0, price_period=600.0)
+    return SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
+                     sched_policy=SchedPolicy.LOAD_BALANCE,
+                     sleep_policy=SleepPolicy.SINGLE_TIMER,
+                     sleep_state=SrvState.S3, max_events=60_000,
+                     thermal=tcfg, trace=TraceConfig(enabled=True), **kw)
+
+
+def _run_engine(cfg, arr, specs, tau=None):
+    jt = build_jobs(cfg, np.asarray(arr), specs)
+    state, tc = engine.init_state(cfg, jt)
+    if tau is not None:
+        state = dataclasses.replace(state, farm=dataclasses.replace(
+            state.farm,
+            srv_tau=jnp.full((cfg.n_servers,), tau, cfg.time_dtype)))
+    return engine.run(state, cfg, tc)
+
+
+@pytest.mark.parametrize("k", [1, 8])
+def test_trace_matches_oracle_event_for_event(k):
+    """Acceptance: the decoded ring agrees with the heapq oracle's
+    emission on kind/time/server/tid for every record, at K=1 and K=8."""
+    cfg = _rich_cfg(events_per_step=k)
+    arr, specs = _workload()
+    res = farm_mod.simulate(cfg, arr, specs, tau=0.05)
+    orc = OracleSim(cfg, arr, specs, tau=0.05).run()
+    assert res.n_finished == len(arr)
+    assert res.trace_dropped == 0
+    assert len(res.trace_events) == len(orc.trace)
+    msg = traceio.diff_traces(res.trace_events,
+                              traceio.as_events(orc.trace),
+                              time_tol=5e-3)
+    assert msg is None, msg
+    kinds = set(res.trace_events["kind"].tolist())
+    for needed in (TraceKind.ARRIVAL, TraceKind.ADMIT, TraceKind.START,
+                   TraceKind.FINISH, TraceKind.JOB_FINISH,
+                   TraceKind.WAKEUP, TraceKind.SLEEP,
+                   TraceKind.THROTTLE_CROSSING):
+        assert needed in kinds, TraceKind.NAMES[needed]
+
+
+def test_trace_k_sweep_leaf_exact_with_control_plane():
+    """The ring is macro-step invariant: emission happens per applied
+    event, not per step, so K=1 and K=8 runs are leaf-exact INCLUDING
+    the trace — under setpoints + controller + diurnal ambient +
+    CARBON_AWARE deferral + throttling (release/ctrl_tick records)."""
+    tcfg = ThermalConfig(**HOT, t_setpoint=(16.0, 24.0),
+                         ambient_swing=3.0, ambient_period=40.0,
+                         ctrl_period=0.5, ctrl_target=55.0,
+                         t_throttle=58.0, t_release=52.0,
+                         throttle_freq=0.5, throttle_power_scale=0.6,
+                         carbon_base=300.0, carbon_swing=0.6,
+                         carbon_period=60.0, defer_threshold=330.0)
+    cfg0 = SimConfig(n_servers=6, n_cores=2, max_jobs=256, tasks_per_job=1,
+                     sched_policy=SchedPolicy.CARBON_AWARE,
+                     sleep_policy=SleepPolicy.SINGLE_TIMER,
+                     sleep_state=SrvState.PKG_C6, max_events=80_000,
+                     thermal=tcfg, trace=TraceConfig(enabled=True))
+    rng = np.random.default_rng(7)
+    n = 120
+    arr = workload.wiki_like_trace(n, 4.0, period=60.0, swing=0.5, seed=3)
+    specs = [dag_single(rng.exponential(0.05), deferrable=(j % 2 == 0),
+                        defer_slack=30.0) for j in range(n)]
+    outs = {k: _run_engine(dataclasses.replace(cfg0, events_per_step=k),
+                           arr, specs, tau=0.5)
+            for k in (1, 8)}
+    # steps counts while-loop iterations, which is exactly what K trades
+    # away — every OTHER leaf (including the ring) must be bit-equal
+    norm = {k: dataclasses.replace(v, steps=jnp.zeros((), jnp.int32))
+            for k, v in outs.items()}
+    for (kp, a), (_, b) in zip(
+            jax.tree_util.tree_leaves_with_path(norm[1]),
+            jax.tree_util.tree_leaves_with_path(norm[8])):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"K=8 vs K=1: leaf {jax.tree_util.keystr(kp)}")
+    ev, _ = traceio.decode(outs[1].trace, cfg0)
+    kinds = set(ev["kind"].tolist())
+    assert TraceKind.RELEASE in kinds and TraceKind.CTRL_TICK in kinds
+    assert int(outs[1].thermal.defer_count) > 0
+
+
+def test_trace_off_bit_identical_and_statically_absent():
+    """cfg.trace.enabled=False must not perturb the simulation at all
+    (every non-trace leaf bit-identical) and must cost nothing: the
+    placeholder ring is a (1, 5) stub that never advances."""
+    cfg_on = _rich_cfg()
+    cfg_off = dataclasses.replace(cfg_on, trace=TraceConfig())
+    arr, specs = _workload(n_jobs=100)
+    on = _run_engine(cfg_on, arr, specs, tau=0.05)
+    off = _run_engine(cfg_off, arr, specs, tau=0.05)
+    a = dataclasses.replace(on, trace=None)
+    b = dataclasses.replace(off, trace=None)
+    for (kp, la), (_, lb) in zip(jax.tree_util.tree_leaves_with_path(a),
+                                 jax.tree_util.tree_leaves_with_path(b)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"on vs off: leaf {jax.tree_util.keystr(kp)}")
+    assert off.trace.buf.shape == (1, 5)
+    assert int(off.trace.ptr) == 0 and int(off.trace.dropped) == 0
+    assert int(on.trace.ptr) > 0
+
+
+def test_trace_ring_wraparound_counts_drops_exactly():
+    """A 64-slot ring under thousands of events keeps the most recent 64
+    records and counts every eviction: dropped == total_emitted - 64,
+    with total_emitted cross-checked against the oracle's stream."""
+    cap = 64
+    cfg = dataclasses.replace(
+        _rich_cfg(), trace=TraceConfig(enabled=True, capacity=cap))
+    arr, specs = _workload()
+    res = farm_mod.simulate(cfg, arr, specs, tau=0.05)
+    orc = OracleSim(cfg, arr, specs, tau=0.05).run()
+    total = len(orc.trace)
+    assert total > cap
+    assert res.trace_dropped == total - cap
+    assert len(res.trace_events) == cap
+    # the survivors are the newest records: none predates the oracle's
+    # (total-cap)-th emission (times are nondecreasing in both streams)
+    t_floor = float(orc.trace[total - cap][0])
+    assert (res.trace_events["time"] >= t_floor - 5e-3).all()
+
+
+def test_lifecycle_spans_and_critical_path():
+    """Two 2-chains contending for one core: spans tile each task's
+    queued->running->finish, and the critical-path decomposition
+    (queueing + service + flow) reconstructs each job's latency
+    exactly."""
+    cfg = SimConfig(n_servers=1, n_cores=1, max_jobs=8, tasks_per_job=2,
+                    max_children=2, sleep_policy=SleepPolicy.ALWAYS_ON,
+                    max_events=1_000, trace=TraceConfig(enabled=True))
+    arr = np.asarray([0.0, 0.1])
+    specs = [dag_chain([0.5, 0.25]), dag_chain([0.5, 0.25])]
+    final = _run_engine(cfg, arr, specs)
+    ev, n_drop = traceio.decode(final.trace, cfg)
+    assert n_drop == 0
+
+    spans = traceio.lifecycle_spans(ev, final, cfg)
+    assert len(spans) == 4
+    for s in spans:
+        q0, q1 = s["queued"]
+        r0, r1 = s["running"]
+        assert q0 <= q1 == r0 <= r1
+        svc = 0.5 if s["tid"] % 2 == 0 else 0.25
+        assert r1 - r0 == pytest.approx(svc, rel=1e-4)
+        assert s["server"] == 0
+
+    cp = traceio.critical_path(ev, final, cfg)
+    assert [c["job"] for c in cp] == [0, 1]
+    for c in cp:
+        assert c["path"] == [c["job"] * 2, c["job"] * 2 + 1]
+        assert c["flow"] == 0.0
+        assert c["queueing"] + c["service"] == pytest.approx(
+            c["latency"], rel=1e-4, abs=1e-4)
+        assert c["service"] == pytest.approx(0.75, rel=1e-4)
+    # one core serializes 1.5 s of work: somebody queued
+    assert max(c["queueing"] for c in cp) > 0.1
+
+
+def test_chrome_trace_export_schema(tmp_path):
+    """The exported Chrome-trace JSON round-trips and carries metadata
+    (process/thread rows), one duration event per START record, instant
+    events, and telemetry-backed counter tracks."""
+    cfg = dataclasses.replace(
+        _rich_cfg(),
+        telemetry=TelemetryConfig(n_windows=64, window_dt=0.2))
+    arr, specs = _workload(n_jobs=60)
+    final = _run_engine(cfg, arr, specs, tau=0.05)
+    ev, n_drop = traceio.decode(final.trace, cfg)
+    path = tmp_path / "trace.json"
+    traceio.save_chrome_trace(str(path), ev, cfg, state=final,
+                              n_dropped=n_drop)
+    loaded = json.loads(path.read_text())
+    assert loaded["otherData"]["n_servers"] == cfg.n_servers
+    assert loaded["otherData"]["trace_dropped"] == n_drop
+    tes = loaded["traceEvents"]
+    assert {"M", "X", "i", "C"} <= {e["ph"] for e in tes}
+    for e in tes:
+        assert "ph" in e and "pid" in e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0 and e["ts"] >= 0.0
+    n_started = int(np.sum(ev["kind"] == TraceKind.START))
+    assert len([e for e in tes if e["ph"] == "X"]) == n_started
+    thread_rows = [e for e in tes
+                   if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert len(thread_rows) == cfg.n_servers
+
+
+def test_diff_traces_reports_first_divergence():
+    """diff_traces localizes the first mismatch with kind/time/server,
+    and tolerates same-instant reordering + sub-tolerance time skew."""
+    a = traceio.as_events([(0.0, TraceKind.ARRIVAL, -1, 0, 0.0),
+                           (0.0, TraceKind.ADMIT, 2, 0, 0.0),
+                           (1.0, TraceKind.START, 2, 0, 0.5)])
+    # same instant swapped + 1e-5 skew: still a match
+    b = traceio.as_events([(1e-5, TraceKind.ADMIT, 2, 0, 0.0),
+                           (0.0, TraceKind.ARRIVAL, -1, 0, 0.0),
+                           (1.0, TraceKind.START, 2, 0, 0.5)])
+    assert traceio.diff_traces(a, b, time_tol=1e-4) is None
+    # wrong server on the START record
+    c = traceio.as_events([(0.0, TraceKind.ARRIVAL, -1, 0, 0.0),
+                           (0.0, TraceKind.ADMIT, 2, 0, 0.0),
+                           (1.0, TraceKind.START, 3, 0, 0.5)])
+    msg = traceio.diff_traces(a, c, time_tol=1e-4)
+    assert msg is not None and "event #2" in msg and "start" in msg
+    # length mismatch
+    msg = traceio.diff_traces(a, b[:2], time_tol=1e-4)
+    assert msg is not None and "extra event" in msg
+
+
+def test_run_info_provenance():
+    """simulate(profile=True) splits compile from steady-state wall time
+    and records steps/events/throughput/backend plus a JSON-safe config
+    dump."""
+    cfg = SimConfig(n_servers=2, n_cores=1, max_jobs=16, tasks_per_job=1,
+                    sleep_policy=SleepPolicy.ALWAYS_ON, max_events=2_000)
+    res = farm_mod.simulate(cfg, np.asarray([0.0, 0.1]),
+                            [dag_single(0.2), dag_single(0.2)],
+                            profile=True)
+    ri = res.run_info
+    assert ri is not None
+    assert ri.wall_s > 0.0
+    assert ri.events == res.events > 0
+    assert ri.steps > 0
+    assert ri.events_per_s == pytest.approx(ri.events / ri.wall_s)
+    assert isinstance(ri.backend, str) and ri.backend
+    assert np.isfinite(ri.jit_compile_s) and ri.jit_compile_s >= 0.0
+    assert ri.config["n_servers"] == 2
+    assert ri.config["trace"]["enabled"] is False
+    json.dumps(ri.config)        # fully JSON-serializable
