@@ -1121,6 +1121,20 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
         raise ValueError(
             "cfg.has_network=True requires a topology: pass topo= "
             "(flows would silently never route with tc=None)")
+    if cfg.n_present > cfg.n_servers:
+        raise ValueError(
+            f"n_present={cfg.n_present} exceeds n_servers={cfg.n_servers}")
+    if cfg.partition.sharded and cfg.thermal.enabled and racks is None \
+            and topo is None \
+            and cfg.n_servers % max(cfg.thermal.rack_size, 1):
+        # unsharded runs handle an uneven last rack via the general
+        # one-hot grouping; the rack-major block partition cannot, so the
+        # sharded path refuses it up front instead of falling back
+        raise ValueError(
+            f"n_servers={cfg.n_servers} does not fill whole racks of "
+            f"rack_size={cfg.thermal.rack_size}, so the rack-major "
+            f"partition cannot cut on rack boundaries; pad the farm with "
+            f"farm.pad_to_racks(cfg) (inert filler rows)")
     if cfg.sched_policy == SchedPolicy.THERMAL_AWARE \
             and not cfg.thermal.enabled:
         raise ValueError(
@@ -1158,6 +1172,15 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
     return state, tc
 
 
+def loop_cond(cfg: SimConfig):
+    """The run-to-completion while-loop predicate, shared by :func:`run`
+    and the rack-sharded driver (core/shard_sim.py) so both loops stop on
+    exactly the same replicated scalars."""
+    def cond(s):
+        return (~s.done) & (s.events < cfg.max_events)
+    return cond
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def run(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     """Run to completion (or cfg.max_events) under lax.while_loop.
@@ -1165,7 +1188,5 @@ def run(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     With macro-stepping (cfg.events_per_step > 1) the event budget is
     checked between macro-steps, so a run may retire up to
     events_per_step - 1 events past max_events before stopping."""
-    def cond(s):
-        return (~s.done) & (s.events < cfg.max_events)
-
-    return jax.lax.while_loop(cond, lambda s: sim_step(s, cfg, tc), state)
+    return jax.lax.while_loop(loop_cond(cfg), lambda s: sim_step(s, cfg, tc),
+                              state)

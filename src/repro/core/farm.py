@@ -2,6 +2,8 @@
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import time
 from typing import Optional
 
@@ -25,6 +27,14 @@ class RunInfo:
     backend: str                    # jax.default_backend()
     config: dict                    # recursive SimConfig dump
     jit_compile_s: float = float("nan")  # only with simulate(profile=True)
+    # execution-mesh provenance: how the state was laid out, NOT part of
+    # the scenario — config_digest deliberately excludes it so the same
+    # scenario run on 1 or 8 devices compares equal
+    devices: int = 1                # devices the run executed on
+    mesh_shape: tuple = ()          # e.g. (8,)
+    mesh_axes: tuple = ()           # e.g. ("racks",)
+    sharding: str = ""              # PartitionSpec of the server axis
+    config_digest: str = ""         # sha1 over the device-count-free config
 
 
 def _config_dict(obj):
@@ -40,6 +50,41 @@ def _config_dict(obj):
         return np.dtype(obj).name
     except TypeError:
         return str(obj)
+
+
+def config_digest(cfg: SimConfig) -> str:
+    """Stable sha1 of the scenario config, EXCLUDING the partition block
+    (shard/device count is an execution choice, not a scenario): the same
+    farm run unsharded and on an 8-device mesh digests identically."""
+    d = _config_dict(cfg)
+    d.pop("partition", None)
+    return hashlib.sha1(
+        json.dumps(d, sort_keys=True).encode()).hexdigest()
+
+
+def pad_to_racks(cfg: SimConfig, n_shards: Optional[int] = None) -> SimConfig:
+    """Round the farm up to whole racks (and to a rack count divisible by
+    ``n_shards``) with inert filler rows.
+
+    The returned config has ``n_servers`` padded and ``n_present`` holding
+    the real server count.  Padded rows boot OFF/disabled: they draw zero
+    power, emit no events, are never scheduler-eligible, and are masked
+    out of the telemetry temperature/state columns — so results match the
+    unpadded farm while every rack is full and the rack-major partition
+    cuts cleanly.  ``n_shards`` defaults to ``cfg.partition.n_shards``."""
+    K = max(n_shards if n_shards is not None else cfg.partition.n_shards, 1)
+    rs = max(cfg.thermal.rack_size, 1) if cfg.thermal.enabled else 1
+    block = rs * K
+    real = cfg.present
+    n = -(-real // block) * block
+    kw = {}
+    if n_shards is not None and n_shards != cfg.partition.n_shards:
+        kw["partition"] = dataclasses.replace(cfg.partition,
+                                              n_shards=n_shards)
+    if n == cfg.n_servers and not kw:
+        return cfg
+    return dataclasses.replace(cfg, n_servers=n,
+                               n_present=real if n > real else 0, **kw)
 
 
 @dataclasses.dataclass
@@ -102,7 +147,9 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
     ok = (fin < INF / 2) & (arr < INF / 2)
     lat = (fin - arr)[ok]
     t = float(state.t)
-    N, C = cfg.n_servers, cfg.n_cores
+    # utilization is over REAL servers: inert filler rows (pad_to_racks)
+    # own no cores anyone could have used
+    N, C = cfg.present, cfg.n_cores
     pct = (lambda q: float(np.percentile(lat, q))) if lat.size else \
         (lambda q: float("nan"))
     thermal_kw = {}
@@ -156,7 +203,8 @@ def summarize(state: SimState, cfg: SimConfig) -> SimResult:
 
 
 def simulate(cfg: SimConfig, arrivals, specs, topo=None, tau=None,
-             pools=None, racks=None, profile: bool = False) -> SimResult:
+             pools=None, racks=None, profile: bool = False,
+             mesh=None) -> SimResult:
     """Build the job table, run the engine to completion, summarize.
 
     tau   — scalar or (N,) delay-timer values (seconds; INF = never sleep)
@@ -165,6 +213,9 @@ def simulate(cfg: SimConfig, arrivals, specs, topo=None, tau=None,
             to the topology's top-of-rack grouping, else i // rack_size)
     profile — rerun the (now warm) engine once more to split JIT compile
             time out of the wall clock (result.run_info.jit_compile_s)
+    mesh  — run rack-sharded on this device mesh (core/shard_sim.py);
+            ``cfg.partition.n_shards > 1`` with mesh=None builds one from
+            the visible devices.  Results are bit-identical either way.
     """
     jt = jobs_mod.build_jobs(cfg, np.asarray(arrivals), specs)
     state, tc = engine.init_state(cfg, jt, topo, racks)
@@ -178,21 +229,41 @@ def simulate(cfg: SimConfig, arrivals, specs, topo=None, tau=None,
             state, farm=dataclasses.replace(
                 state.farm,
                 srv_pool=jnp.asarray(pools, jnp.int32)))
+
+    sharded = mesh is not None or cfg.partition.sharded
+    if sharded:
+        from . import shard_sim
+        if mesh is None:
+            mesh = shard_sim.make_mesh(cfg.partition.n_shards,
+                                       cfg.partition.axis)
+        runner = lambda: shard_sim.run_sharded(state, cfg, tc, mesh)
+    else:
+        runner = lambda: engine.run(state, cfg, tc)
     t0 = time.perf_counter()
-    final = jax.block_until_ready(engine.run(state, cfg, tc))
+    final = jax.block_until_ready(runner())
     wall = time.perf_counter() - t0
     compile_s = float("nan")
     if profile:
         t1 = time.perf_counter()
-        final = jax.block_until_ready(engine.run(state, cfg, tc))
+        final = jax.block_until_ready(runner())
         warm = time.perf_counter() - t1
         compile_s = max(wall - warm, 0.0)
         wall = warm
     res = summarize(final, cfg)
     n_ev = int(final.events)
+    if sharded:
+        axis = cfg.partition.axis
+        mesh_shape = tuple(int(mesh.shape[a]) for a in mesh.axis_names)
+        mesh_axes = tuple(mesh.axis_names)
+        devices, sharding = int(np.prod(mesh_shape)), f"P('{axis}',)"
+    else:
+        mesh_shape, mesh_axes = (), ()
+        devices, sharding = 1, ""
     res.run_info = RunInfo(
         wall_s=wall, steps=int(final.steps), events=n_ev,
         events_per_s=n_ev / max(wall, 1e-12),
         backend=jax.default_backend(), config=_config_dict(cfg),
-        jit_compile_s=compile_s)
+        jit_compile_s=compile_s,
+        devices=devices, mesh_shape=mesh_shape, mesh_axes=mesh_axes,
+        sharding=sharding, config_digest=config_digest(cfg))
     return res

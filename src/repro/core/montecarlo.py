@@ -43,7 +43,14 @@ def batched_state(cfg: SimConfig, arrivals_b, specs, taus=None, topo=None):
 
 def run_replicas(cfg: SimConfig, state_b, tc=None, mesh=None):
     """vmap the engine over the replica axis; optionally shard_map the
-    replica batch over every mesh axis."""
+    replica batch over the mesh.
+
+    The replica batch maps onto every mesh axis EXCEPT the rack-sharding
+    axis (``cfg.partition.axis``, normally "racks"): on a 2-D
+    ("replicas", "racks") mesh, Monte Carlo replicas split over the
+    orthogonal "replicas" axis while each replica's farm state stays
+    whole (replicated) along "racks" — the two parallelism axes compose
+    without interfering."""
     runner = jax.vmap(functools.partial(engine.run.__wrapped__, cfg=cfg,
                                         tc=tc))
     if mesh is None:
@@ -51,7 +58,9 @@ def run_replicas(cfg: SimConfig, state_b, tc=None, mesh=None):
     from jax.sharding import PartitionSpec as P
 
     from ..sharding.compat import shard_map
-    spec = P(tuple(mesh.axis_names))          # prefix spec: replica dim 0
+    bax = tuple(a for a in mesh.axis_names if a != cfg.partition.axis)
+    # prefix spec: replica dim 0 over the non-rack axes
+    spec = P(bax) if bax else P()
     fn = shard_map(runner, mesh=mesh, in_specs=(spec,), out_specs=spec,
                    check_vma=False)
     return jax.jit(fn)(state_b)

@@ -138,8 +138,10 @@ def provisioning_adjust(farm: ServerFarm, cfg: SimConfig, sched,
     per = active_jobs.astype(jnp.float32) / jnp.maximum(n * cfg.n_cores, 1.0)
     grow = per > cfg.prov_hi
     shrink = (per < cfg.prov_lo) & (sched.n_enabled > 1)
+    # the enabled set can only grow into real servers — padded filler
+    # rows (index >= cfg.present) stay disabled forever
     n_new = jnp.clip(sched.n_enabled + jnp.where(grow, 1, 0)
-                     - jnp.where(shrink, 1, 0), 1, cfg.n_servers)
+                     - jnp.where(shrink, 1, 0), 1, cfg.present)
     enabled = jnp.arange(cfg.n_servers) < n_new
     return replace(farm, srv_enabled=enabled), replace(sched, n_enabled=n_new)
 

@@ -120,7 +120,11 @@ def window_values(state, cfg: SimConfig, dt, p_busy=None,
         p_sw = power.switch_power(state.net, cfg).sum().astype(jnp.float32)
     else:
         p_sw = jnp.float32(0.0)
-    per_state = onehot.sum(axis=0)
+    # padded filler rows (farm.pad_to_racks) are telemetry-inert: they sit
+    # OFF forever, so the static suffix slice keeps them out of the
+    # per-state counts (the padding is a suffix by construction)
+    per_state = onehot[:cfg.present].sum(axis=0) if cfg.has_padding \
+        else onehot.sum(axis=0)
     awake = per_state[SrvState.ACTIVE] + per_state[SrvState.IDLE]
     head = jnp.stack([jnp.float32(1.0), active, awake, qdepth, p_srv, p_sw])
     if tcfg.enabled:
@@ -142,9 +146,17 @@ def window_values(state, cfg: SimConfig, dt, p_busy=None,
         else:
             target, alpha, t_end, p_cool = thermal_ctx
         kw = (p_srv + p_sw + p_cool) * jnp.float32(1.0e-3)
+        if cfg.has_padding:
+            # padded rows idle at the cold-aisle temperature; keep them
+            # out of the farm mean/max columns (suffix padding -> slice)
+            np_ = cfg.present
+            target, t_srv_m, t_end_m = (target[:np_], t_srv[:np_],
+                                        t_end[:np_])
+        else:
+            t_srv_m, t_end_m = t_srv, t_end
         mean_int = target.mean() * dtf \
-            + (t_srv - target).mean() * tcfg.tau_th * alpha
-        max_interval = jnp.maximum(t_srv, t_end).max()
+            + (t_srv_m - target).mean() * tcfg.tau_th * alpha
+        max_interval = jnp.maximum(t_srv_m, t_end_m).max()
         therm_cols = jnp.stack([
             p_cool * dtf, mean_int, max_interval * dtf,
             ici, ipr, kw * ici / 3600.0, kw * ipr / 3600.0])

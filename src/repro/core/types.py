@@ -371,6 +371,33 @@ class TraceConfig:
 
 
 @dataclass(frozen=True)
+class PartitionConfig:
+    """Rack-major sharding of the per-server state axes (core/shard_sim.py).
+
+    The farm is stored rack-major: server ``i`` sits in rack
+    ``i // thermal.rack_size``, so a flat (N,) server axis IS the flattened
+    (R, S) rack-major layout and a contiguous block partition along it cuts
+    exactly on rack boundaries.  ``n_shards`` declares how many equal rack
+    groups the per-server (and per-rack) axes split into; each shard lands
+    on one device of the "racks" mesh axis, making recirculation row means,
+    CRAC setpoints, and per-rack COP shard-local by construction.
+
+    ``n_shards = 1`` (default) is the unsharded engine, bit-identical to a
+    mesh-free run; the sharded step gathers the rack shards once per
+    macro-step (the thin collective phase), runs the event core
+    collective-free, and re-slices — so any ``n_shards`` produces the
+    same trajectory bit-for-bit.
+    """
+
+    n_shards: int = 1
+    axis: str = "racks"            # mesh axis name the rack groups map to
+
+    @property
+    def sharded(self) -> bool:
+        return self.n_shards > 1
+
+
+@dataclass(frozen=True)
 class SimConfig:
     """Static shape/topology/policy configuration (hashable; jit-static)."""
 
@@ -432,11 +459,28 @@ class SimConfig:
     thermal: ThermalConfig = field(default_factory=ThermalConfig)
     # device-side event flight recorder
     trace: TraceConfig = field(default_factory=TraceConfig)
+    # rack-major device sharding of the per-server state axes
+    partition: PartitionConfig = field(default_factory=PartitionConfig)
+    # farm padding (see farm.pad_to_racks): servers at index >= n_present
+    # are inert filler rows that round the farm up to whole racks (and to
+    # a shardable rack-group multiple).  0 means "all n_servers real".
+    # Padded rows boot OFF/disabled: they draw zero power, never receive
+    # work, and are masked out of the telemetry temperature/state columns.
+    n_present: int = 0
     time_dtype: Any = jnp.float32
 
     @property
     def n_tasks(self) -> int:
         return self.max_jobs * self.tasks_per_job
+
+    @property
+    def present(self) -> int:
+        """Number of real (schedulable) servers; <= n_servers."""
+        return self.n_present if self.n_present else self.n_servers
+
+    @property
+    def has_padding(self) -> bool:
+        return 0 < self.n_present < self.n_servers
 
 
 # --------------------------------------------------------------------------
@@ -633,14 +677,19 @@ class SimState:
 def init_farm(cfg: SimConfig) -> ServerFarm:
     N, C = cfg.n_servers, cfg.n_cores
     tdt = cfg.time_dtype
+    # padded filler rows (index >= cfg.present) boot OFF and disabled: the
+    # OFF power row is the literal 0.0, every next-event candidate is INF,
+    # and no scheduling policy can pick a disabled server — so the rows
+    # are power/event/scheduler inert without any per-step masking
+    real = jnp.arange(N) < cfg.present
     return ServerFarm(
         core_busy_until=jnp.full((N, C), INF, tdt),
-        srv_state=jnp.full((N,), SrvState.IDLE, jnp.int32),
+        srv_state=jnp.where(real, SrvState.IDLE, SrvState.OFF),
         srv_wake_at=jnp.full((N,), INF, tdt),
         srv_idle_since=jnp.zeros((N,), tdt),
         srv_tau=jnp.full((N,), INF, tdt),
         srv_pool=jnp.zeros((N,), jnp.int32),
-        srv_enabled=jnp.ones((N,), bool),
+        srv_enabled=real,
         q_len=jnp.zeros((N,), jnp.int32),
         q_seq=jnp.zeros((), jnp.int32),
         energy=jnp.zeros((N,), jnp.float32),
@@ -686,7 +735,7 @@ def init_net(n_switches: int, n_ports: int, n_links: int,
 def init_sched(cfg: SimConfig) -> SchedState:
     return SchedState(
         rr_ptr=jnp.zeros((), jnp.int32),
-        n_enabled=jnp.asarray(cfg.n_servers, jnp.int32),
+        n_enabled=jnp.asarray(cfg.present, jnp.int32),
         gq_tasks=jnp.full((cfg.global_q,), -1, jnp.int32),
         gq_head=jnp.zeros((), jnp.int32),
         gq_len=jnp.zeros((), jnp.int32),

@@ -110,3 +110,59 @@ def batch_pspec(mesh: Mesh, global_batch: Optional[int] = None) -> P:
     if global_batch is not None and global_batch % _axes_size(mesh, bax):
         return P()
     return P(bax if len(bax) > 1 else bax[0])
+
+
+# --------------------------------------------------------------------------
+# simulator state sharding (core/shard_sim.py)
+# --------------------------------------------------------------------------
+#
+# The DES state has exactly two shardable logical axes: "server" (the
+# rack-major per-server axis of ServerFarm/ThermalState) and "rack" (the
+# per-rack CRAC arrays).  Both map onto the same mesh axis — a contiguous
+# block of whole racks per device — so rack row-reductions never straddle
+# a shard boundary.  Everything else (job/flow/switch tables, telemetry
+# windows, the trace ring, scalars) is replicated.
+
+SIM_AXIS = "racks"
+
+# ThermalState fields that carry the per-server / per-rack axes.  The
+# remaining thermal fields (scalar integrals, ctrl_next) are replicated,
+# as is rack_onehot: it is only non-empty for NON-contiguous rack
+# groupings, which the sharded path rejects up front.
+THERMAL_SERVER_FIELDS = frozenset(
+    {"t_srv", "throttled", "rack_id", "t_peak", "throttle_seconds"})
+THERMAL_RACK_FIELDS = frozenset({"t_set", "rack_inv"})
+
+
+def sim_rules(axis: str = SIM_AXIS) -> Dict[str, Any]:
+    return {"server": (axis,), "rack": (axis,)}
+
+
+def sim_state_specs(state, cfg, mesh: Mesh, axis: str = SIM_AXIS):
+    """Flat per-leaf PartitionSpecs for a SimState (leaf order of
+    ``jax.tree.flatten``): rack-major axes -> P(axis), all else P().
+
+    Uses the same ``resolve_spec`` rail as the model shardings, so a
+    non-divisible farm degrades to replication instead of crashing —
+    ``shard_sim.run_sharded`` validates divisibility up front and treats
+    that fallback as an error."""
+    rules = sim_rules(axis)
+    N = cfg.n_servers
+    leaves_with_path, _ = jax.tree_util.tree_flatten_with_path(state)
+    out = []
+    for path, leaf in leaves_with_path:
+        names = [getattr(k, "name", str(k)) for k in path]
+        top, name = names[0], names[-1]
+        ndim = getattr(leaf, "ndim", 0)
+        ax0 = None
+        if ndim >= 1:
+            if top == "farm" and leaf.shape[0] == N:
+                ax0 = "server"
+            elif top == "thermal" and cfg.thermal.enabled:
+                if name in THERMAL_SERVER_FIELDS:
+                    ax0 = "server"
+                elif name in THERMAL_RACK_FIELDS:
+                    ax0 = "rack"
+        logical = (ax0,) + (None,) * (ndim - 1) if ndim else ()
+        out.append(resolve_spec(logical, leaf.shape, mesh, rules))
+    return tuple(out)
