@@ -297,10 +297,14 @@ def shard_point(n_shards, n_servers, n_jobs=600, seed=0):
     if n_shards == 1:
         runner = lambda: engine.run(state, cfg, tc)
     else:
+        from repro.analysis import jaxpr_audit
         mesh = shard_sim.make_mesh(n_shards)
         runner = lambda: shard_sim.run_sharded(state, cfg, tc, mesh)
-        counts = shard_sim.collective_counts(
+        inv = jaxpr_audit.audit(
             shard_sim.sharded_step_jaxpr(state, cfg, tc, mesh))
+        counts = {p: inv.count(frozenset({p}))
+                  for p in sorted(jaxpr_audit.COLLECTIVE_PRIMS)
+                  if inv.count(frozenset({p}))}
         rec["collectives_per_macro_step"] = counts
         rec["collective_total"] = sum(counts.values())
     out = jax.block_until_ready(runner())          # compile + warm

@@ -1,0 +1,26 @@
+"""simlint: static analysis over the traced jaxprs the engine actually runs.
+
+The hot loop earned a set of structural contracts across PRs 2-7 (scatter
+budgets, one ``all_gather`` per sharded leaf, disabled features statically
+absent, f64-clean clocks, no host callbacks, no retraces).  This package
+machine-checks them at trace time:
+
+* :mod:`.jaxpr_audit` -- recursive jaxpr walker with region provenance
+  (``cheap_core`` / ``full_step`` named scopes) producing a per-primitive
+  inventory, plus the clock-dtype taint interpreter.
+* :mod:`.rules` -- declarative rules (``ForbidPrimitive``, ``ExactCount``,
+  ``DtypePolicy``, ``NoNewPrimitives``) diffed against a committed
+  ``ANALYSIS_BASELINE.json`` with explicit waivers.
+* :mod:`.costmodel` -- per-equation bytes/FLOPs estimator and the static
+  state-footprint (HBM budget) report.
+* :mod:`.retrace` -- the compile-cache sentinel: a second trace for an
+  identical ``(cfg, mesh, layout)`` key is a failure.
+* :mod:`.matrix` -- the audited config matrix (every SchedPolicy, thermal
+  off/tracking/throttling, trace on/off, sharded 1/8 devices, the vmapped
+  Monte Carlo replica step, f64-clock twins).
+* :mod:`.simlint` -- the ``python -m repro.analysis.simlint`` CLI.
+"""
+
+from . import costmodel, jaxpr_audit, retrace, rules
+
+__all__ = ["costmodel", "jaxpr_audit", "retrace", "rules"]

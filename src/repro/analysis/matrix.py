@@ -1,0 +1,306 @@
+"""The audited config matrix: the compiled programs we actually run.
+
+Each case traces one step program — ``engine.sim_step`` for a
+(SchedPolicy × thermal × trace) config, the shard-mapped macro-step on
+1 / 8 virtual devices, or the vmapped Monte Carlo replica step — and
+packages the closed jaxpr plus everything the rules need (state template
+for the clock audit, the sharded-leaf count, static feature flags).
+
+Builders are lazy: :func:`build_case` traces on demand so the CLI can
+select configs and sequence the f64 twins after the f32 cases (enabling
+``jax_enable_x64`` mid-process must not precede any f32 trace).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class AuditCase:
+    """One traced program plus the facts the rules consume."""
+
+    name: str
+    closed_jaxpr: object
+    state_template: object  # pytree matching the jaxpr's positional leaves
+    time_dtype: object
+    thermal_on: bool
+    trace_on: bool
+    n_sharded: Optional[int] = None  # sharded cases: expected all_gathers
+    kind: str = "engine"  # engine | sharded | vmap
+
+
+def _small(n_servers=8, **kw):
+    from ..core.types import SimConfig
+
+    base = dict(n_servers=n_servers, n_cores=2, max_jobs=64,
+                max_events=20_000)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _workload(n_jobs=20, lam=40.0, seed=3, defer_slack=None):
+    from ..core import workload
+    from ..core.jobs import dag_single
+
+    rng = np.random.default_rng(seed)
+    arr = workload.poisson_arrivals(lam, n_jobs, seed=seed)
+    kw = {} if defer_slack is None else {"defer_slack": defer_slack}
+    specs = [dag_single(rng.exponential(0.02), **kw) for _ in range(n_jobs)]
+    return arr, specs
+
+
+def _built_state(cfg, n_jobs=20, topo=None, **wkw):
+    from ..core import engine
+    from ..core import jobs as jobs_mod
+
+    arr, specs = _workload(n_jobs=n_jobs, **wkw)
+    jt = jobs_mod.build_jobs(cfg, np.asarray(arr), specs)
+    return engine.init_state(cfg, jt, topo)
+
+
+def _thermal(**kw):
+    from ..core.types import ThermalConfig
+
+    base = dict(enabled=True, r_th=0.5, tau_th=2.0, t_inlet=22.0,
+                recirc=0.2, rack_size=2)
+    base.update(kw)
+    return ThermalConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# config builders: (cfg, topo, workload kwargs)
+# --------------------------------------------------------------------------
+
+
+def _cfg_round_robin():
+    from ..core.types import SchedPolicy, SleepPolicy
+
+    return _small(sched_policy=SchedPolicy.ROUND_ROBIN,
+                  sleep_policy=SleepPolicy.ALWAYS_ON), None, {}
+
+
+def _cfg_load_balance():
+    from ..core.types import SchedPolicy, SleepPolicy
+
+    return _small(sched_policy=SchedPolicy.LOAD_BALANCE,
+                  sleep_policy=SleepPolicy.SINGLE_TIMER), None, {}
+
+
+def _cfg_network_aware():
+    from ..core import topology
+    from ..core.types import SchedPolicy
+
+    cfg = _small(sched_policy=SchedPolicy.NETWORK_AWARE, max_jobs=32,
+                 tasks_per_job=2, max_children=2, max_flows=64,
+                 local_q=32, has_network=True, comm_model=0)
+    return cfg, topology.star(8, link_cap=1.0e8), {"chains": True}
+
+
+def _cfg_provisioned():
+    from ..core.types import SchedPolicy
+
+    return _small(sched_policy=SchedPolicy.PROVISIONED), None, {}
+
+
+def _cfg_wasp():
+    from ..core.types import SchedPolicy, SleepPolicy
+
+    return _small(sched_policy=SchedPolicy.WASP_POOLS,
+                  sleep_policy=SleepPolicy.WASP), None, {}
+
+
+def _cfg_thermal_aware():
+    from ..core.types import SchedPolicy
+
+    return _small(sched_policy=SchedPolicy.THERMAL_AWARE,
+                  thermal=_thermal()), None, {}
+
+
+def _cfg_carbon_aware():
+    from ..core.types import SchedPolicy
+
+    tcfg = _thermal(defer_threshold=350.0, carbon_period=600.0,
+                    carbon_swing=0.5)
+    return (_small(sched_policy=SchedPolicy.CARBON_AWARE, thermal=tcfg),
+            None, {"defer_slack": 300.0})
+
+
+def _cfg_thermal_tracking():
+    from ..core.types import SchedPolicy
+
+    return _small(sched_policy=SchedPolicy.LOAD_BALANCE,
+                  thermal=_thermal()), None, {}
+
+
+def _cfg_thermal_throttling():
+    from ..core.types import SchedPolicy
+
+    tcfg = _thermal(t_throttle=50.0, t_release=45.0, throttle_freq=0.5,
+                    throttle_power_scale=0.6)
+    return _small(sched_policy=SchedPolicy.LOAD_BALANCE,
+                  thermal=tcfg), None, {}
+
+
+def _cfg_trace_on():
+    from ..core.types import SchedPolicy, TraceConfig
+
+    return _small(sched_policy=SchedPolicy.LOAD_BALANCE,
+                  trace=TraceConfig(enabled=True)), None, {}
+
+
+def _cfg_f64(builder):
+    import jax.numpy as jnp
+
+    def build():
+        cfg, topo, wkw = builder()
+        return dataclasses.replace(cfg, time_dtype=jnp.float64), topo, wkw
+
+    return build
+
+
+_ENGINE_CONFIGS = {
+    "policy_round_robin": _cfg_round_robin,
+    "policy_load_balance": _cfg_load_balance,
+    "policy_network_aware": _cfg_network_aware,
+    "policy_provisioned": _cfg_provisioned,
+    "policy_wasp": _cfg_wasp,
+    "policy_thermal_aware": _cfg_thermal_aware,
+    "policy_carbon_aware": _cfg_carbon_aware,
+    "thermal_tracking": _cfg_thermal_tracking,
+    "thermal_throttling": _cfg_thermal_throttling,
+    "trace_on": _cfg_trace_on,
+}
+
+_F64_CONFIGS = {
+    "f64_load_balance": _cfg_f64(_cfg_load_balance),
+    "f64_thermal_throttling": _cfg_f64(_cfg_thermal_throttling),
+}
+
+
+def _build_workload_state(cfg, topo, wkw):
+    if wkw.get("chains"):
+        from ..core import engine
+        from ..core import jobs as jobs_mod
+        from ..core import workload
+        from ..core.jobs import dag_chain
+
+        rng = np.random.default_rng(2)
+        arr = workload.poisson_arrivals(25.0, 16, seed=2)
+        specs = [dag_chain(rng.uniform(0.01, 0.04, size=2),
+                           edge_bytes=float(rng.uniform(4e6, 8e6)))
+                 for _ in range(16)]
+        jt = jobs_mod.build_jobs(cfg, np.asarray(arr), specs)
+        return engine.init_state(cfg, jt, topo)
+    return _built_state(cfg, topo=topo, **wkw)
+
+
+def _engine_case(name, builder) -> AuditCase:
+    import jax
+
+    from ..core import engine
+
+    cfg, topo, wkw = builder()
+    state, tc = _build_workload_state(cfg, topo, wkw)
+    jx = jax.make_jaxpr(engine.step_closure(cfg, tc))(state)
+    return AuditCase(
+        name=name, closed_jaxpr=jx, state_template=state,
+        time_dtype=cfg.time_dtype, thermal_on=cfg.thermal.enabled,
+        trace_on=cfg.trace.enabled, kind="engine")
+
+
+def _montecarlo_case() -> AuditCase:
+    import jax
+
+    from ..core import engine, montecarlo, workload
+    from ..core.jobs import dag_single
+
+    cfg = _small(max_events=5_000)
+    R = 4
+    arrs = np.stack([workload.poisson_arrivals(40.0, 12, seed=s)
+                     for s in range(R)])
+    specs = [dag_single(0.02) for _ in range(12)]
+    state_b, tc = montecarlo.batched_state(cfg, arrs, specs)
+    jx = jax.make_jaxpr(jax.vmap(engine.step_closure(cfg, tc)))(state_b)
+    return AuditCase(
+        name="montecarlo_vmap", closed_jaxpr=jx, state_template=state_b,
+        time_dtype=cfg.time_dtype, thermal_on=False, trace_on=False,
+        kind="vmap")
+
+
+def _sharded_case(n_devices: int) -> AuditCase:
+    from ..core import shard_sim
+    from ..core.types import PartitionConfig, TraceConfig
+
+    cfg = _small(
+        n_servers=16, max_jobs=32, max_events=1_000,
+        thermal=_thermal(), trace=TraceConfig(enabled=True),
+        partition=PartitionConfig(n_shards=n_devices))
+    state, tc = _built_state(cfg, n_jobs=5)
+    mesh = shard_sim.make_mesh(n_devices)
+    jx = shard_sim.sharded_step_jaxpr(state, cfg, tc, mesh)
+    return AuditCase(
+        name=f"sharded_d{n_devices}", closed_jaxpr=jx,
+        state_template=state, time_dtype=cfg.time_dtype, thermal_on=True,
+        trace_on=True,
+        n_sharded=shard_sim.n_sharded_leaves(state, cfg, mesh),
+        kind="sharded")
+
+
+def case_names(n_devices_available: int = 1) -> list:
+    """All case names in build order (f32 first, f64 twins last — the
+    CLI enables x64 between the two groups)."""
+    names = list(_ENGINE_CONFIGS) + ["montecarlo_vmap", "sharded_d1"]
+    if n_devices_available >= 8:
+        names.append("sharded_d8")
+    names += list(_F64_CONFIGS)
+    return names
+
+
+def needs_x64(name: str) -> bool:
+    return name in _F64_CONFIGS
+
+
+def build_case(name: str) -> AuditCase:
+    if name in _ENGINE_CONFIGS:
+        return _engine_case(name, _ENGINE_CONFIGS[name])
+    if name in _F64_CONFIGS:
+        return _engine_case(name, _F64_CONFIGS[name])
+    if name == "montecarlo_vmap":
+        return _montecarlo_case()
+    if name.startswith("sharded_d"):
+        return _sharded_case(int(name[len("sharded_d"):]))
+    raise KeyError(f"unknown audit case '{name}'")
+
+
+def state_footprint_cases() -> dict:
+    """Configs for the HBM-budget table, including the 65536-server farm
+    (sized via eval_shape — nothing is materialised)."""
+    from ..core.types import ThermalConfig, TraceConfig
+
+    return {
+        "farm_8": _small(),
+        "farm_1024": _small(n_servers=1024, max_jobs=4096),
+        "farm_65536": _small(
+            n_servers=65536, n_cores=2, max_jobs=65536,
+            thermal=ThermalConfig(enabled=True, rack_size=32),
+            trace=TraceConfig(enabled=True)),
+    }
+
+
+def footprint_of(cfg) -> dict:
+    """State-footprint via eval_shape over an init closure (no arrays)."""
+    from ..core import engine
+    from ..core import jobs as jobs_mod
+    from ..core.jobs import dag_single
+    from . import costmodel
+
+    def init():
+        jt = jobs_mod.build_jobs(cfg, np.zeros(1), [dag_single(0.01)])
+        state, _ = engine.init_state(cfg, jt)
+        return state
+
+    return costmodel.state_footprint(init)

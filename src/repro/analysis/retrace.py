@@ -1,0 +1,69 @@
+"""Retrace sentinel: a second trace for an identical program key is a bug.
+
+PR 7 made ``farm.simulate`` / ``shard_sim.run_sharded`` reuse compiled
+programs across calls (jit cache keyed on ``(cfg, state layout)``, an
+``lru_cache`` over ``(cfg, mesh, axis, layout, specs)`` for the sharded
+loop).  A silent cache miss — e.g. a config object that stops hashing
+stably, or a state layout that drifts between calls — costs a full retrace
++ recompile per call and the benchmarks only see it as noise.
+
+The engine's traced entry points call :func:`note_trace` at *trace time*
+(a Python side effect inside the jitted body runs only when XLA actually
+retraces).  :func:`retrace_guard` scopes the bookkeeping: run the same
+simulation twice inside the guard and any key traced more than once is a
+named violation.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+
+# (tag, key) -> number of traces observed. Module-level so engine/shard_sim
+# can call note_trace without importing analysis machinery at trace time.
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+_ENABLED = False
+
+
+def note_trace(tag: str, key) -> None:
+    """Record one trace of ``tag`` for program ``key``.  Call from inside
+    a jitted body (runs only when the tracer actually runs)."""
+    if _ENABLED:
+        _TRACE_COUNTS[(tag, _freeze(key))] += 1
+
+
+def _freeze(key):
+    if isinstance(key, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in key.items()))
+    if isinstance(key, (list, tuple)):
+        return tuple(_freeze(v) for v in key)
+    return key
+
+
+def retraced_keys() -> list:
+    """Keys traced more than once since the guard was entered."""
+    return [
+        {"tag": tag, "key": repr(key), "traces": n}
+        for (tag, key), n in sorted(_TRACE_COUNTS.items(), key=lambda kv: repr(kv[0]))
+        if n > 1
+    ]
+
+
+def trace_events() -> list:
+    return [
+        {"tag": tag, "key": repr(key), "traces": n}
+        for (tag, key), n in sorted(_TRACE_COUNTS.items(), key=lambda kv: repr(kv[0]))
+    ]
+
+
+@contextlib.contextmanager
+def retrace_guard():
+    """Enable trace counting within the block; yields a callable that
+    returns the retraced keys observed so far."""
+    global _ENABLED
+    _TRACE_COUNTS.clear()
+    _ENABLED = True
+    try:
+        yield retraced_keys
+    finally:
+        _ENABLED = False

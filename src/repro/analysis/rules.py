@@ -1,0 +1,252 @@
+"""Declarative rules over jaxpr inventories, diffed against a committed
+baseline.
+
+A rule is a named check over one audited program.  Violations carry the rule
+name and the offending equation's source line, so a CI failure reads::
+
+    [cheap-core-scatter-free] policy_load_balance: 19 scatter eqns in region
+    'cheap_core', baseline pins 18
+        new site: scatter-add at repro/core/engine.py:412 (_apply_events)
+
+Baselines (``ANALYSIS_BASELINE.json``) pin the exact counts the current
+engine earns; ``NoNewPrimitives`` additionally pins the full per-region
+primitive histogram so *any* structural drift is loud.  Intentional drift is
+recorded as a waiver entry ``{config, region, prim, reason}`` (``"*"``
+wildcards allowed) rather than silently regenerating the baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from . import jaxpr_audit
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    config: str
+    message: str
+    sites: tuple = ()  # source locations backing the message
+
+    def render(self) -> str:
+        lines = [f"[{self.rule}] {self.config}: {self.message}"]
+        lines += [f"    at {s}" for s in self.sites]
+        return "\n".join(lines)
+
+
+class Rule:
+    """Base: ``check(config_name, inventory, baseline_entry) -> [Violation]``."""
+
+    def check(self, config, inv, baseline_entry):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class ForbidPrimitive(Rule):
+    """Named primitives must not appear (optionally only within a region)."""
+
+    name: str
+    prims: frozenset
+    region: Optional[str] = None
+    why: str = ""
+
+    def check(self, config, inv, baseline_entry):
+        sites = inv.sites_of(self.prims, self.region)
+        if not sites:
+            return []
+        where = f" in region '{self.region}'" if self.region else ""
+        found = sorted({s.prim for s in sites})
+        return [
+            Violation(
+                rule=self.name,
+                config=config,
+                message=(
+                    f"{len(sites)} forbidden eqn(s) {found}{where}"
+                    + (f" — {self.why}" if self.why else "")
+                ),
+                sites=tuple(f"{s.prim} at {s.src}" for s in sites[:8]),
+            )
+        ]
+
+
+@dataclasses.dataclass
+class ExactCount(Rule):
+    """A primitive set must appear exactly ``expect`` times.
+
+    ``expect`` may be an int, or the name of a baseline field to read the
+    pinned count from (so budgets live in ANALYSIS_BASELINE.json, not code).
+    """
+
+    name: str
+    prims: frozenset
+    expect: object  # int | str (baseline field)
+    region: Optional[str] = None
+    why: str = ""
+
+    def check(self, config, inv, baseline_entry):
+        expect = self.expect
+        if isinstance(expect, str):
+            if baseline_entry is None or expect not in baseline_entry:
+                return [
+                    Violation(
+                        rule=self.name,
+                        config=config,
+                        message=f"baseline field '{expect}' missing — run --update",
+                    )
+                ]
+            expect = baseline_entry[expect]
+        got = inv.count(self.prims, self.region)
+        if got == expect:
+            return []
+        where = f" in region '{self.region}'" if self.region else ""
+        sites = inv.sites_of(self.prims, self.region)
+        return [
+            Violation(
+                rule=self.name,
+                config=config,
+                message=(
+                    f"{got} eqn(s) of {sorted(self.prims)}{where},"
+                    f" expected exactly {expect}"
+                    + (f" — {self.why}" if self.why else "")
+                ),
+                sites=tuple(f"{s.prim} at {s.src}" for s in sites[:8]),
+            )
+        ]
+
+
+@dataclasses.dataclass
+class DtypePolicy(Rule):
+    """Clock discipline: declared time leaves keep ``time_dtype`` end to
+    end, and no time value is rebuilt from a lossy downcast outside the
+    declared ``f32_domain`` regions."""
+
+    name: str = "clock-dtype-policy"
+
+    def check_clock(self, config, report):
+        out = []
+        for leaf, where, dtype in report.census_violations:
+            out.append(
+                Violation(
+                    rule=self.name,
+                    config=config,
+                    message=(
+                        f"time leaf '{leaf}' ({where}) has dtype {dtype},"
+                        f" policy requires {report.time_dtype}"
+                    ),
+                )
+            )
+        for leaf, site in report.degraded_leaves:
+            out.append(
+                Violation(
+                    rule=self.name,
+                    config=config,
+                    message=(
+                        f"time leaf '{leaf}' reconstructed from a value"
+                        f" downcast below {report.time_dtype} outside"
+                        f" '{jaxpr_audit.F32_DOMAIN}'"
+                    ),
+                    sites=(f"downcast at {site}",),
+                )
+            )
+        return out
+
+    def check(self, config, inv, baseline_entry):
+        return []  # clock checks run via check_clock with a ClockReport
+
+
+@dataclasses.dataclass
+class NoNewPrimitives(Rule):
+    """The per-region primitive histogram must match the committed baseline
+    exactly, modulo explicit waivers."""
+
+    name: str = "no-new-primitives"
+    advisory: bool = False  # demoted when the jax version drifted
+
+    def check(self, config, inv, baseline_entry):
+        if baseline_entry is None or "histogram" not in baseline_entry:
+            return [
+                Violation(
+                    rule=self.name,
+                    config=config,
+                    message="no committed histogram for this config — run --update",
+                )
+            ]
+        want = baseline_entry["histogram"]
+        got = inv.histogram()
+        waivers = baseline_entry.get("waivers", [])
+        out = []
+        regions = sorted(set(want) | set(got))
+        for region in regions:
+            wh = want.get(region, {})
+            gh = got.get(region, {})
+            for prim in sorted(set(wh) | set(gh)):
+                w, g = wh.get(prim, 0), gh.get(prim, 0)
+                if w == g or _waived(waivers, config, region, prim):
+                    continue
+                sites = inv.sites_of(prim)
+                sites = [s for s in sites if s.region == region][:4]
+                out.append(
+                    Violation(
+                        rule=self.name,
+                        config=config,
+                        message=(
+                            f"region '{region or '<outer>'}': {prim} count"
+                            f" {g} != baseline {w}"
+                            + (" (advisory: jax version drift)" if self.advisory else "")
+                        ),
+                        sites=tuple(f"{s.prim} at {s.src}" for s in sites),
+                    )
+                )
+        return out
+
+
+def _waived(waivers, config, region, prim) -> bool:
+    def hit(pat, val):
+        return pat == "*" or pat == val
+
+    return any(
+        hit(w.get("config", "*"), config)
+        and hit(w.get("region", "*"), region)
+        and hit(w.get("prim", "*"), prim)
+        for w in waivers
+    )
+
+
+# ==========================================================================
+# baseline file handling
+# ==========================================================================
+
+
+def load_baseline(path) -> dict:
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def save_baseline(path, baseline: dict) -> None:
+    with open(path, "w") as fh:
+        json.dump(baseline, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def baseline_entry_from(inv) -> dict:
+    """Build the committed entry for one config from its inventory."""
+    return {
+        "histogram": inv.histogram(),
+        "scatter_cheap_core": inv.count(
+            jaxpr_audit.SCATTER_PRIMS, "cheap_core"
+        ),
+        "scatter_total": inv.count(jaxpr_audit.SCATTER_PRIMS),
+        "eqns": inv.n_eqns,
+        "waivers": [],
+    }
+
+
+def merge_baseline_entry(old: Optional[dict], new: dict) -> dict:
+    """Regenerate counts but keep hand-written waivers."""
+    if old and old.get("waivers"):
+        new = dict(new)
+        new["waivers"] = old["waivers"]
+    return new

@@ -1,0 +1,262 @@
+"""``python -m repro.analysis.simlint`` — run the audit matrix, write a
+JSON report, and diff it against the committed baseline.
+
+Usage::
+
+    python -m repro.analysis.simlint --update ANALYSIS_BASELINE.json
+    python -m repro.analysis.simlint --check ANALYSIS_BASELINE.json
+    python -m repro.analysis.simlint --configs policy_load_balance,trace_on
+
+``--check`` exits non-zero on any violation (rule name + source line are
+printed); ``--update`` regenerates the pinned counts while preserving
+hand-written waivers.  The sharded cases need 8 virtual devices — the CLI
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` itself when
+jax has not been imported yet.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# must precede the first jax import (device count is fixed at backend init)
+_N_VIRTUAL_DEVICES = 8
+
+
+def _ensure_devices() -> None:
+    # importing jax does NOT initialize the backend; the flag takes effect
+    # as long as no devices have been queried yet (runpy imports the
+    # analysis package — and thus jax — before main() runs)
+    flag = f"--xla_force_host_platform_device_count={_N_VIRTUAL_DEVICES}"
+    prev = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in prev:
+        os.environ["XLA_FLAGS"] = f"{prev} {flag}".strip()
+
+
+def _rules_for(case, baseline_entry, advisory):
+    """The named rule set one case must satisfy."""
+    from . import rules
+    from .jaxpr_audit import (CALLBACK_PRIMS, COLLECTIVE_PRIMS,
+                              SCATTER_PRIMS)
+
+    rs = [
+        rules.ForbidPrimitive(
+            name="no-host-callbacks", prims=CALLBACK_PRIMS,
+            why="host round-trips stall the device loop"),
+        rules.ExactCount(
+            name="cheap-core-scatter-free", prims=SCATTER_PRIMS,
+            region="cheap_core", expect="scatter_cheap_core",
+            why="XLA:CPU serializes scatters; the cheap-core budget is "
+                "pinned and must not grow"),
+        rules.NoNewPrimitives(advisory=advisory),
+    ]
+    if case.kind == "sharded":
+        rs.append(rules.ExactCount(
+            name="one-all-gather-per-sharded-leaf",
+            prims=frozenset({"all_gather"}), expect=case.n_sharded,
+            why="the macro-step's whole collective phase is the "
+                "top-of-step gather"))
+        rs.append(rules.ForbidPrimitive(
+            name="no-other-collectives",
+            prims=COLLECTIVE_PRIMS - {"all_gather"},
+            why="any second collective kind per step breaks the thin "
+                "collective-phase contract"))
+    else:
+        rs.append(rules.ForbidPrimitive(
+            name="no-collectives-single-device", prims=COLLECTIVE_PRIMS,
+            why="the unsharded engine must stay communication-free"))
+    if not case.thermal_on:
+        rs.append(rules.ForbidPrimitive(
+            name="thermal-off-statically-absent",
+            prims=frozenset({"exp", "cos", "sin"}),
+            why="disabled thermal must contribute zero equations "
+                "(transcendentals are its static signature)"))
+    if not case.trace_on:
+        rs.append(rules.ForbidPrimitive(
+            name="trace-off-statically-absent",
+            prims=frozenset({"population_count"}),
+            why="disabled tracing must contribute zero equations "
+                "(packbits' population_count is its static signature)"))
+    return rs
+
+
+def _audit_one(name, baseline_cases, advisory):
+    from . import costmodel, jaxpr_audit, matrix, rules
+
+    case = matrix.build_case(name)
+    inv = jaxpr_audit.audit(case.closed_jaxpr)
+    clock = jaxpr_audit.clock_audit(
+        case.closed_jaxpr, case.state_template, case.time_dtype)
+    cost = costmodel.cost_of(case.closed_jaxpr)
+
+    entry = baseline_cases.get(name)
+    violations = []
+    for rule in _rules_for(case, entry, advisory):
+        violations.extend(rule.check(name, inv, entry))
+    violations.extend(rules.DtypePolicy().check_clock(name, clock))
+
+    report = {
+        "summary": inv.summary(),
+        "cost": cost.to_json(),
+        "clock": {
+            "time_dtype": clock.time_dtype,
+            "out_census": clock.out_census,
+            "degraded_leaves": clock.degraded_leaves,
+            # time-derived values exiting to lower precision outside the
+            # tagged f32_domain scopes (benign while degraded_leaves is
+            # empty: they feed physics, not clocks)
+            "time_downcast_sites": clock.downcast_sites,
+        },
+        "violations": [v.render() for v in violations],
+    }
+    if case.n_sharded is not None:
+        report["n_sharded_leaves"] = case.n_sharded
+    return case, inv, violations, report
+
+
+def _retrace_check():
+    """Run the engine + sharded paths twice each under the sentinel: any
+    key traced more than once is a no-retrace violation."""
+    from . import retrace, rules
+    from ..core import farm as farm_mod
+    from ..core import shard_sim, workload
+    from ..core.jobs import dag_single
+    from ..core.types import SimConfig
+
+    cfg = SimConfig(n_servers=8, n_cores=2, max_jobs=32, max_events=5_000)
+    arr = workload.poisson_arrivals(40.0, 10, seed=3)
+    specs = [dag_single(0.02) for _ in range(10)]
+    mesh = shard_sim.make_mesh(1)
+    violations = []
+    with retrace.retrace_guard() as retraced:
+        for m in (None, mesh):  # engine.run path, then run_sharded path
+            farm_mod.simulate(cfg, arr, specs, mesh=m)
+            farm_mod.simulate(cfg, arr, specs, mesh=m)  # must hit the cache
+        for hit in retraced():
+            violations.append(rules.Violation(
+                rule="no-retrace", config=hit["tag"],
+                message=(f"program key traced {hit['traces']}x — the "
+                         f"compile cache leaked: {hit['key'][:200]}")))
+        events = retrace.trace_events()
+    seen_tags = {e["tag"] for e in events}
+    for tag in ("engine.run", "shard_sim.loop"):
+        if tag not in seen_tags:
+            violations.append(rules.Violation(
+                rule="no-retrace", config="sentinel",
+                message=f"sentinel saw no '{tag}' trace — the note_trace "
+                        f"hook is disconnected"))
+    return violations, {"traces": events,
+                        "violations": [v.render() for v in violations]}
+
+
+def main(argv=None) -> int:
+    _ensure_devices()
+    ap = argparse.ArgumentParser(prog="repro.analysis.simlint")
+    ap.add_argument("--out", default="simlint_report.json",
+                    help="JSON report path")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="diff against a committed baseline; exit 1 on "
+                         "violations")
+    ap.add_argument("--update", metavar="BASELINE",
+                    help="write/refresh the baseline (waivers preserved)")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated case subset (default: full "
+                         "matrix)")
+    ap.add_argument("--no-retrace", action="store_true",
+                    help="skip the retrace sentinel (it executes small "
+                         "simulations)")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from . import costmodel, matrix, rules
+
+    names = matrix.case_names(len(jax.devices()))
+    if args.configs:
+        want = args.configs.split(",")
+        unknown = [w for w in want if w not in names]
+        if unknown:
+            ap.error(f"unknown configs {unknown}; known: {names}")
+        names = [n for n in names if n in want]
+
+    baseline = {}
+    if args.check:
+        baseline = rules.load_baseline(args.check)
+    elif args.update and os.path.exists(args.update):
+        baseline = rules.load_baseline(args.update)
+    baseline_cases = baseline.get("cases", {})
+    advisory = bool(baseline) and baseline.get("jax") != jax.__version__
+    if advisory:
+        print(f"note: baseline jax {baseline.get('jax')} != runtime "
+              f"{jax.__version__}; histogram drift demoted to advisory")
+
+    report = {"jax": jax.__version__, "cases": {}}
+    new_cases = {}
+    all_violations = []
+    for name in names:
+        if matrix.needs_x64(name):
+            jax.config.update("jax_enable_x64", True)
+        try:
+            case, inv, violations, case_report = _audit_one(
+                name, baseline_cases, advisory)
+        finally:
+            if matrix.needs_x64(name):
+                jax.config.update("jax_enable_x64", False)
+        report["cases"][name] = case_report
+        new_cases[name] = rules.merge_baseline_entry(
+            baseline_cases.get(name), rules.baseline_entry_from(inv))
+        all_violations.extend(violations)
+        s = case_report["summary"]
+        print(f"{name:<26} eqns={s['eqns']:<5} "
+              f"scatter={s['scatter']:<3} "
+              f"(cheap_core={s['scatter_cheap_core']}) "
+              f"collectives={sum(s['collectives'].values())} "
+              f"violations={len(violations)}")
+
+    if not args.no_retrace:
+        retrace_violations, retrace_report = _retrace_check()
+        report["retrace"] = retrace_report
+        all_violations.extend(retrace_violations)
+        print(f"{'retrace-sentinel':<26} "
+              f"traces={len(retrace_report['traces'])} "
+              f"violations={len(retrace_violations)}")
+
+    footprints = {label: matrix.footprint_of(cfg)
+                  for label, cfg in matrix.state_footprint_cases().items()}
+    report["footprints"] = footprints
+    print("\nstate footprint (HBM budget):")
+    print(costmodel.footprint_table(footprints))
+    print("\nlargest fields, farm_65536:")
+    print(costmodel.field_table(footprints["farm_65536"]))
+
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"\nreport written to {args.out}")
+
+    if args.update:
+        rules.save_baseline(args.update, {
+            "jax": jax.__version__,
+            "cases": new_cases,
+        })
+        print(f"baseline written to {args.update}")
+        return 0
+
+    hard = [v for v in all_violations
+            if not (advisory and v.rule == "no-new-primitives")]
+    if all_violations:
+        print(f"\n{len(all_violations)} violation(s):")
+        for v in all_violations:
+            print(v.render())
+    if args.check:
+        missing = [n for n in names if n not in baseline_cases]
+        if missing:
+            print(f"\nno baseline entry for {missing} — run --update")
+            return 1
+        return 1 if hard else 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,7 +49,6 @@ waking sleeping servers on demand.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,8 +57,8 @@ from . import network as net_mod
 from . import power, scheduler, server, telemetry
 from . import thermal as thermal_mod
 from . import trace as trace_mod
-from .types import (INF, FlowTable, JobTable, NetState, SchedPolicy,
-                    SchedState, ServerFarm, SimConfig, SimState,
+from .types import (INF, JobTable, SchedPolicy,
+                    ServerFarm, SimConfig, SimState,
                     SleepPolicy, SrvState, TaskStatus, TraceKind,
                     init_farm, init_flows, init_net, init_sched, replace)
 
@@ -154,7 +153,10 @@ def _advance_interval(state: SimState, cfg: SimConfig, tc, t_next):
     completion free runs in the fused Pallas kernel."""
     farm = state.farm
     dt = t_next - state.t
-    dtf = dt.astype(jnp.float32)
+    with jax.named_scope("f32_domain"):
+        # intentional exit from the clock domain: physics/energy math runs
+        # in f32 regardless of time_dtype (audited — analysis/jaxpr_audit)
+        dtf = dt.astype(jnp.float32)
     telemetry_on = cfg.telemetry.enabled
     thermal_on = cfg.thermal.enabled
     throttled = state.thermal.throttled if thermal_on else None
@@ -248,8 +250,9 @@ def _rebuild_job_completion(jobs: JobTable, cfg: SimConfig, now):
     job_finish stamped at ``now``."""
     T = cfg.tasks_per_job
     tasks_done = ((jobs.status == TaskStatus.DONE)
-                  & jobs.valid).reshape(-1, T).sum(axis=1)
-    n_valid_tasks = jobs.valid.reshape(-1, T).sum(axis=1)
+                  & jobs.valid).reshape(-1, T).sum(axis=1,
+                                                   dtype=jnp.int32)
+    n_valid_tasks = jobs.valid.reshape(-1, T).sum(axis=1, dtype=jnp.int32)
     job_complete = (tasks_done >= n_valid_tasks) & (tasks_done > 0)
     job_finish = jnp.where(job_complete & (jobs.job_finish >= INF),
                            now, jobs.job_finish)
@@ -493,7 +496,10 @@ def _apply_arrival(state: SimState, cfg: SimConfig, tc=None, hold=None,
         # release chunk would see a load snapshot missing that chunk's
         # not-yet-drained roots
         elig = elig & ~hold
-    n_adm = elig.sum()
+    # pinned accumulator dtype: under jax_enable_x64 a bare bool sum lands
+    # int64 and poisons arr_ptr's branch dtypes (found by the simlint
+    # f64-clock twin configs)
+    n_adm = elig.sum(dtype=jnp.int32)
 
     def _net_cost():
         if cfg.has_network and \
@@ -1037,14 +1043,18 @@ def _apply_thermal_events(state: SimState, cfg: SimConfig,
 
 
 def _consume_cheap(state: SimState, cfg: SimConfig, tc, t_next):
-    state = _advance_interval(state, cfg, tc, t_next)
-    recs = [] if cfg.trace.enabled else None
-    state = _apply_thermal_events(state, cfg, recs)
-    state = _apply_events(state, cfg, tc, cheap=True, recs=recs)
-    if cfg.trace.enabled:
-        state = replace(state, trace=trace_mod.flush(
-            state.trace, cfg, state.t, recs))
-    return replace(state, events=state.events + 1)
+    # the named_scope tags every equation of the cheap core with region
+    # "cheap_core" so the static auditor (analysis/) can budget it
+    # separately from the full step
+    with jax.named_scope("cheap_core"):
+        state = _advance_interval(state, cfg, tc, t_next)
+        recs = [] if cfg.trace.enabled else None
+        state = _apply_thermal_events(state, cfg, recs)
+        state = _apply_events(state, cfg, tc, cheap=True, recs=recs)
+        if cfg.trace.enabled:
+            state = replace(state, trace=trace_mod.flush(
+                state.trace, cfg, state.t, recs))
+        return replace(state, events=state.events + 1)
 
 
 def _macro_chew(state: SimState, cfg: SimConfig, tc):
@@ -1070,25 +1080,26 @@ def _macro_chew(state: SimState, cfg: SimConfig, tc):
 
 
 def _full_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
-    t_next = next_event_time(state, cfg)
-    # a t_next at the INF sentinel means "no pending events": freeze time
-    # (the done check below will terminate the loop) instead of integrating
-    # energy over an unbounded interval
-    t_next = jnp.where(t_next >= INF / 2, state.t, t_next)
-    state = _advance_interval(state, cfg, tc, t_next)
-    recs = [] if cfg.trace.enabled else None
-    state = _apply_thermal_events(state, cfg, recs)
-    state = _apply_events(state, cfg, tc, cheap=False, recs=recs)
-    if cfg.trace.enabled:
-        state = replace(state, trace=trace_mod.flush(
-            state.trace, cfg, state.t, recs))
+    with jax.named_scope("full_step"):
+        t_next = next_event_time(state, cfg)
+        # a t_next at the INF sentinel means "no pending events": freeze
+        # time (the done check below will terminate the loop) instead of
+        # integrating energy over an unbounded interval
+        t_next = jnp.where(t_next >= INF / 2, state.t, t_next)
+        state = _advance_interval(state, cfg, tc, t_next)
+        recs = [] if cfg.trace.enabled else None
+        state = _apply_thermal_events(state, cfg, recs)
+        state = _apply_events(state, cfg, tc, cheap=False, recs=recs)
+        if cfg.trace.enabled:
+            state = replace(state, trace=trace_mod.flush(
+                state.trace, cfg, state.t, recs))
 
-    all_done = (~state.jobs.valid
-                | (state.jobs.status == TaskStatus.DONE)).all() \
-        & (_next_arrival(state.jobs) >= INF)
-    if cfg.has_network:
-        all_done = all_done & ~state.flows.active.any()
-    return replace(state, events=state.events + 1, done=all_done)
+        all_done = (~state.jobs.valid
+                    | (state.jobs.status == TaskStatus.DONE)).all() \
+            & (_next_arrival(state.jobs) >= INF)
+        if cfg.has_network:
+            all_done = all_done & ~state.flows.active.any()
+        return replace(state, events=state.events + 1, done=all_done)
 
 
 def sim_step(state: SimState, cfg: SimConfig, tc=None) -> SimState:
@@ -1172,6 +1183,28 @@ def init_state(cfg: SimConfig, jobs: JobTable, topo=None,
     return state, tc
 
 
+def step_closure(cfg: SimConfig, tc=None):
+    """A ``state -> state`` closure over one macro-step, for jaxpr tracing
+    by the static auditor (``analysis/``)."""
+    def step(state: SimState) -> SimState:
+        return sim_step(state, cfg, tc)
+    return step
+
+
+def _layout_key(tree) -> tuple:
+    """Hashable (shape, dtype) layout of a pytree of tracers/arrays."""
+    return tuple(
+        (tuple(x.shape), str(x.dtype)) if hasattr(x, "shape") else repr(x)
+        for x in jax.tree_util.tree_leaves(tree))
+
+
+def _note_trace(tag: str, key) -> None:
+    """Trace-time side effect feeding the retrace sentinel (no-op unless
+    analysis.retrace has enabled counting)."""
+    from ..analysis import retrace
+    retrace.note_trace(tag, key)
+
+
 def loop_cond(cfg: SimConfig):
     """The run-to-completion while-loop predicate, shared by :func:`run`
     and the rack-sharded driver (core/shard_sim.py) so both loops stop on
@@ -1188,5 +1221,8 @@ def run(state: SimState, cfg: SimConfig, tc=None) -> SimState:
     With macro-stepping (cfg.events_per_step > 1) the event budget is
     checked between macro-steps, so a run may retire up to
     events_per_step - 1 events past max_events before stopping."""
+    # executes only when XLA actually (re)traces this (cfg, layout) key —
+    # the retrace sentinel fails if the same key traces twice
+    _note_trace("engine.run", (cfg, _layout_key((state, tc))))
     return jax.lax.while_loop(loop_cond(cfg), lambda s: sim_step(s, cfg, tc),
                               state)

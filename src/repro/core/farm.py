@@ -236,9 +236,12 @@ def simulate(cfg: SimConfig, arrivals, specs, topo=None, tau=None,
         if mesh is None:
             mesh = shard_sim.make_mesh(cfg.partition.n_shards,
                                        cfg.partition.axis)
-        runner = lambda: shard_sim.run_sharded(state, cfg, tc, mesh)
+
+        def runner():
+            return shard_sim.run_sharded(state, cfg, tc, mesh)
     else:
-        runner = lambda: engine.run(state, cfg, tc)
+        def runner():
+            return engine.run(state, cfg, tc)
     t0 = time.perf_counter()
     final = jax.block_until_ready(runner())
     wall = time.perf_counter() - t0

@@ -13,7 +13,6 @@ inside the jitted engine step.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .types import (INF, SchedPolicy, ServerFarm, SimConfig, SleepPolicy,

@@ -187,7 +187,7 @@ def try_start(farm: ServerFarm, cfg: SimConfig, jobs: JobTable, now,
     awake = (farm.srv_state == SrvState.ACTIVE) \
         | (farm.srv_state == SrvState.IDLE)
     free = farm.core_busy_until >= INF                          # (N, C)
-    n_free = free.sum(axis=1)
+    n_free = free.sum(axis=1, dtype=jnp.int32)
     n_start = jnp.where(awake, jnp.minimum(n_free, farm.q_len), 0)
 
     def apply_start(farm, jobs, rank):

@@ -42,8 +42,8 @@ from ..sharding.compat import shard_map
 from . import engine
 from .types import SimConfig
 
-__all__ = ["make_mesh", "run_sharded", "sharded_step_jaxpr",
-           "collective_counts", "validate_sharding"]
+__all__ = ["make_mesh", "n_sharded_leaves", "run_sharded",
+           "sharded_step_jaxpr", "validate_sharding"]
 
 
 def make_mesh(n_shards: int, axis: str = mesh_lib.SIM_AXIS):
@@ -130,6 +130,12 @@ def _runner_for(cfg: SimConfig, mesh, axis, treedef, specs, n_state):
     cond = engine.loop_cond(cfg)
 
     def loop(*all_leaves):
+        # trace-time side effect: lru_cache hits skip this entirely, so a
+        # second firing for the same key means the compile cache leaked
+        # (pinned by the analysis/retrace sentinel)
+        engine._note_trace(
+            "shard_sim.loop",
+            (cfg, str(mesh), axis, str(treedef), str(specs), n_state))
         tc_leaves = list(all_leaves[n_state:])
 
         def body(lv):
@@ -170,13 +176,8 @@ def run_sharded(state, cfg: SimConfig, tc=None, mesh=None):
 
 
 # ==========================================================================
-# shard-efficiency introspection (bench_engine)
+# shard-efficiency introspection (bench_engine, analysis/)
 # ==========================================================================
-
-_COLLECTIVE_PRIMS = frozenset({
-    "all_gather", "all_gather_invariant", "psum", "psum2", "pmin", "pmax",
-    "all_to_all", "ppermute", "reduce_scatter", "pgather", "all_reduce",
-})
 
 
 def sharded_step_jaxpr(state, cfg: SimConfig, tc=None, mesh=None):
@@ -195,32 +196,12 @@ def sharded_step_jaxpr(state, cfg: SimConfig, tc=None, mesh=None):
     return jax.make_jaxpr(fn)(*leaves)
 
 
-def collective_counts(jaxpr) -> dict:
-    """Occurrences of each cross-device collective primitive in ``jaxpr``
-    (recursing into cond/while/closed sub-jaxprs).  For the macro-step
-    jaxpr this counts the whole collective phase: one all_gather per
-    rack-sharded leaf, nothing inside the event core."""
-    counts: dict = {}
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            name = eqn.primitive.name
-            if name in _COLLECTIVE_PRIMS:
-                counts[name] = counts.get(name, 0) + 1
-            for v in eqn.params.values():
-                for sub in _subjaxprs(v):
-                    walk(sub)
-
-    def _subjaxprs(v):
-        core = jax.core
-        if isinstance(v, core.ClosedJaxpr):
-            yield v.jaxpr
-        elif isinstance(v, core.Jaxpr):
-            yield v
-        elif isinstance(v, (tuple, list)):
-            for e in v:
-                yield from _subjaxprs(e)
-
-    closed = getattr(jaxpr, "jaxpr", jaxpr)
-    walk(closed)
-    return counts
+def n_sharded_leaves(state, cfg: SimConfig, mesh=None) -> int:
+    """How many state leaves the rack partition actually shards — the
+    expected ``all_gather`` count per macro-step (one per sharded leaf;
+    counting lives in ``analysis.jaxpr_audit``)."""
+    axis = cfg.partition.axis
+    if mesh is None:
+        mesh = make_mesh(cfg.partition.n_shards, axis)
+    specs = mesh_lib.sim_state_specs(state, cfg, mesh, axis)
+    return sum(1 for sp in specs if len(sp) and sp[0] == axis)

@@ -174,9 +174,14 @@ def fat_tree(k: int, link_cap: float = 125e6, ports_per_lc: int = 8):
     n_agg = k * half
     n_core = half * half
     base = n_servers
-    edge_id = lambda pod, e: base + pod * half + e
-    agg_id = lambda pod, a: base + n_edge + pod * half + a
-    core_id = lambda i, j: base + n_edge + n_agg + i * half + j
+    def edge_id(pod, e):
+        return base + pod * half + e
+
+    def agg_id(pod, a):
+        return base + n_edge + pod * half + a
+
+    def core_id(i, j):
+        return base + n_edge + n_agg + i * half + j
 
     edges = []
     for pod in range(k):
@@ -215,8 +220,11 @@ def bcube(n: int, link_cap: float = 125e6, ports_per_lc: int = 8):
     two NICs and participate in forwarding (via BFS paths through servers)."""
     n_servers = n * n
     base = n_servers
-    lvl0 = lambda g: base + g          # level-0 switch of group g
-    lvl1 = lambda i: base + n + i      # level-1 switch i
+    def lvl0(g):                       # level-0 switch of group g
+        return base + g
+
+    def lvl1(i):                       # level-1 switch i
+        return base + n + i
     edges = []
     for g in range(n):
         for s in range(n):
@@ -230,7 +238,8 @@ def bcube(n: int, link_cap: float = 125e6, ports_per_lc: int = 8):
 def camcube(dx: int, dy: int, dz: int, link_cap: float = 125e6):
     """CamCube: server-only 3D torus; servers forward (symbiotic routing)."""
     n_servers = dx * dy * dz
-    idx = lambda x, y, z: (x % dx) * dy * dz + (y % dy) * dz + (z % dz)
+    def idx(x, y, z):
+        return (x % dx) * dy * dz + (y % dy) * dz + (z % dz)
     edges = set()
     for x in range(dx):
         for y in range(dy):

@@ -39,7 +39,6 @@ decoding/export lives in ``core/traceio.py``.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -17,7 +17,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # A "practically infinite" simulation time.  Using a finite sentinel (rather
 # than jnp.inf) keeps min-reductions well-defined under f32 and survives
@@ -684,7 +683,8 @@ def init_farm(cfg: SimConfig) -> ServerFarm:
     real = jnp.arange(N) < cfg.present
     return ServerFarm(
         core_busy_until=jnp.full((N, C), INF, tdt),
-        srv_state=jnp.where(real, SrvState.IDLE, SrvState.OFF),
+        srv_state=jnp.where(real, SrvState.IDLE,
+                            SrvState.OFF).astype(jnp.int32),
         srv_wake_at=jnp.full((N,), INF, tdt),
         srv_idle_since=jnp.zeros((N,), tdt),
         srv_tau=jnp.full((N,), INF, tdt),

@@ -90,8 +90,9 @@ def tree_pspecs(specs, shapes, mesh: Mesh, rules=None):
     """specs: pytree of logical tuples; shapes: matching pytree of
     array-likes (or ShapeDtypeStructs).  Returns pytree of PartitionSpec."""
     rules = rules or default_rules(mesh)
-    is_spec = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
     return jax.tree.map(
         lambda sp, a: resolve_spec(sp, a.shape, mesh, rules),
         specs, shapes, is_leaf=is_spec)

@@ -2,7 +2,6 @@
 checkpoint atomicity/resume, optimizer math."""
 import dataclasses
 import os
-import pathlib
 import subprocess
 import sys
 

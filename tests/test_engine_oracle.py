@@ -6,7 +6,7 @@ import pytest
 from repro.core import farm as farm_mod
 from repro.core import workload
 from repro.core.jobs import dag_chain, dag_fanout, dag_single
-from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
+from repro.core.types import (SchedPolicy, SimConfig, SleepPolicy,
                               SrvState)
 
 from oracle import OracleSim

@@ -17,7 +17,7 @@ import pytest
 
 from repro.core import engine, farm as farm_mod
 from repro.core import network as net_mod
-from repro.core import scheduler, server, topology, workload
+from repro.core import scheduler, server, topology
 from repro.core.jobs import build_jobs, dag_chain, dag_single
 from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
                               SrvState, init_farm, init_flows, init_net,

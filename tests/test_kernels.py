@@ -13,7 +13,7 @@ try:
 except ImportError:                                       # pragma: no cover
     HAVE_HYPOTHESIS = False
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssm_scan import ssm_scan
 from repro.kernels.dcsim_step import dcsim_advance, INF

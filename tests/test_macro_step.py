@@ -17,7 +17,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import engine, farm as farm_mod, topology, workload
+from repro.core import engine, topology, workload
 from repro.core.jobs import build_jobs, dag_chain, dag_single
 from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
                               SrvState, ThermalConfig)

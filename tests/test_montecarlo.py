@@ -3,7 +3,7 @@ individual runs, and the fault-model helpers must be sane."""
 import numpy as np
 import pytest
 
-from repro.core import engine, farm as farm_mod, montecarlo, topology, \
+from repro.core import farm as farm_mod, montecarlo, topology, \
     workload
 from repro.core.jobs import dag_chain, dag_single
 from repro.core.types import SchedPolicy, SimConfig, SleepPolicy

@@ -17,7 +17,6 @@ Both try_start rank paths (the dense argsort rank and the COMPACT_Q
 pairwise batch) are exercised with a q_seq parked just under the wrap
 boundary so the stamps straddle 2^31 - 1 -> -2^31.
 """
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

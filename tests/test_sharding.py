@@ -154,7 +154,10 @@ def test_sim_state_specs_mark_only_rack_major_axes():
 def test_collective_count_is_one_gather_per_sharded_leaf():
     """The macro-step's whole collective phase is the top-of-step gather:
     exactly one all_gather per rack-sharded leaf, nothing else — the
-    cheap-event chew loop is collective-free."""
+    cheap-event chew loop is collective-free.  Expressed as the same
+    named rules the simlint CI job pins (analysis/rules.py)."""
+    from repro.analysis import jaxpr_audit, rules
+
     cfg = SimConfig(n_servers=8, n_cores=2, max_jobs=32, max_events=1000,
                     thermal=ThermalConfig(enabled=True, rack_size=2),
                     trace=TraceConfig(enabled=True))
@@ -162,11 +165,17 @@ def test_collective_count_is_one_gather_per_sharded_leaf():
     state, tc = _built_state(cfg, arr, specs)
     mesh = shard_sim.make_mesh(1)
     jx = shard_sim.sharded_step_jaxpr(state, cfg, tc, mesh)
-    counts = shard_sim.collective_counts(jx)
-    ps = mesh_lib.sim_state_specs(state, cfg, mesh)
-    n_sharded = sum(1 for sp in ps if len(sp))
-    assert counts.get("all_gather", 0) == n_sharded > 0
-    assert sum(counts.values()) == n_sharded, counts
+    inv = jaxpr_audit.audit(jx)
+    n_sharded = shard_sim.n_sharded_leaves(state, cfg, mesh)
+    assert n_sharded > 0
+    gather_rule = rules.ExactCount(
+        name="one-all-gather-per-sharded-leaf",
+        prims=frozenset({"all_gather"}), expect=n_sharded)
+    other_rule = rules.ForbidPrimitive(
+        name="no-other-collectives",
+        prims=jaxpr_audit.COLLECTIVE_PRIMS - {"all_gather"})
+    bad = gather_rule.check("d1", inv, None) + other_rule.check("d1", inv, None)
+    assert not bad, "\n".join(v.render() for v in bad)
 
 
 def test_validate_sharding_rejects_bad_layouts():
@@ -200,6 +209,7 @@ import dataclasses
 import numpy as np
 import jax
 
+from repro.analysis import jaxpr_audit, rules
 from repro.core import engine, jobs as jobs_mod, shard_sim, topology, \
     traceio, workload
 from repro.core.jobs import dag_chain, dag_single
@@ -265,6 +275,24 @@ for build in (lb_sleep, rr_star, thermal_throttle, carbon_aware):
     cfg, arr, specs, topo, tau = build()
     jt = jobs_mod.build_jobs(cfg, np.asarray(arr), specs)
     state, tc = engine.init_state(cfg, jt, topo)
+    # the same named rules the simlint CI job pins, on the real 8-device
+    # shard-mapped program of each policy config
+    jx = shard_sim.sharded_step_jaxpr(state, cfg, tc, mesh)
+    inv = jaxpr_audit.audit(jx)
+    n_sharded = shard_sim.n_sharded_leaves(state, cfg, mesh)
+    assert n_sharded > 0
+    audit_bad = []
+    for rule in (
+            rules.ExactCount(name="one-all-gather-per-sharded-leaf",
+                             prims=frozenset({"all_gather"}),
+                             expect=n_sharded),
+            rules.ForbidPrimitive(
+                name="no-other-collectives",
+                prims=jaxpr_audit.COLLECTIVE_PRIMS - {"all_gather"}),
+            rules.ForbidPrimitive(name="no-host-callbacks",
+                                  prims=jaxpr_audit.CALLBACK_PRIMS)):
+        audit_bad.extend(rule.check(build.__name__, inv, None))
+    assert not audit_bad, "\n".join(v.render() for v in audit_bad)
     if tau is not None:
         state = dataclasses.replace(
             state, farm=dataclasses.replace(
@@ -292,7 +320,8 @@ print("SHARDED-BITWISE-EQUAL")
 def test_sharded_equals_unsharded_bitwise_8_devices():
     """8 virtual devices, four pinned policy configs (sleep states, star
     flows, throttling, carbon deferral): every state leaf AND the decoded
-    trace ring match the single-device engine exactly."""
+    trace ring match the single-device engine exactly, and each config's
+    shard-mapped jaxpr passes the named collective-contract rules."""
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
     r = subprocess.run([sys.executable, "-c", _EQ_SCRIPT], env=env,

@@ -20,7 +20,7 @@ import numpy as np
 import pytest
 
 from repro.core import farm as farm_mod
-from repro.core import montecarlo, telemetry, thermal, topology, traceio, \
+from repro.core import montecarlo, topology, traceio, \
     workload
 from repro.core.jobs import dag_single
 from repro.core.types import (INF, SchedPolicy, SimConfig, SleepPolicy,
@@ -455,7 +455,8 @@ def test_deferred_dag_job_stays_parked_until_release():
                     sleep_policy=SleepPolicy.ALWAYS_ON, max_events=10_000,
                     thermal=tcfg)
     slack = 5.0
-    chain = lambda: dag_chain([0.4, 0.4])
+    def chain():
+        return dag_chain([0.4, 0.4])
     parked = chain()
     parked.deferrable, parked.defer_slack = True, slack
     arr = np.asarray([0.0, 0.1])

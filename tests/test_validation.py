@@ -22,7 +22,7 @@ except ImportError:                                       # pragma: no cover
 from repro.core import farm as farm_mod
 from repro.core import workload
 from repro.core.jobs import dag_single
-from repro.core.types import (INF, SchedPolicy, ServerPowerProfile,
+from repro.core.types import (SchedPolicy,
                               SimConfig, SleepPolicy, SrvState)
 
 
@@ -124,7 +124,8 @@ def test_mmpp_burstiness():
     pois = workload.poisson_arrivals(lam, 20_000, seed=1)
     mmpp = workload.mmpp2_arrivals(lam_h=4 * lam / 2.2, lam_l=0.4 * lam / 2.2,
                                    r_hl=1.0, r_lh=2.0, n_jobs=20_000, seed=1)
-    cv = lambda a: np.std(np.diff(a)) / np.mean(np.diff(a))
+    def cv(a):
+        return np.std(np.diff(a)) / np.mean(np.diff(a))
     assert cv(mmpp) > 1.3 * cv(pois)
     assert cv(pois) == pytest.approx(1.0, abs=0.05)
 
